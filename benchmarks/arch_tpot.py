@@ -1,0 +1,22 @@
+"""Beyond-paper: the flash-PIM device priced on the 10 assigned archs.
+
+The paper evaluates OPT only; this table projects the same device models
+(plane DSE, H-tree tiling, SLC dMVM, ARM controller) onto every assigned
+architecture — including regimes the paper never considered (MoE routing
+reads only active experts from QLC; MLA's 576-dim latent cache; SSM's
+constant-size state in place of a KV cache)."""
+from repro.configs.registry import ARCHS, ASSIGNED
+from repro.core.mapping import flash_tpot_for
+
+from benchmarks.common import emit
+
+
+def run():
+    for a in ASSIGNED:
+        cfg = ARCHS[a]
+        r = flash_tpot_for(cfg)
+        emit(f"arch_tpot/{a}", r["total"] * 1e6,
+             f"smvm={r['smvm']*1e3:.2f}ms;dmvm={r['dmvm']*1e3:.2f}ms;"
+             f"ctrl={r['controller']*1e3:.2f}ms;"
+             f"active={r['active_params']/1e9:.1f}B;"
+             f"qlc={r['weights_gib_qlc']:.1f}GiB")

@@ -1,0 +1,19 @@
+"""Fig. 12: sMVM tiling-option latency breakdowns (OPT-30B d_m=7168)."""
+from repro.core import tiling
+
+from benchmarks.common import emit
+
+
+def run():
+    cases = tiling.fig12_cases()
+    for label, c in cases.items():
+        emit(f"fig12/{label.replace('/', '.')}", c.total * 1e6,
+             f"in={c.t_in*1e6:.2f};pim={c.t_pim*1e6:.2f};"
+             f"tree={c.t_tree*1e6:.2f};out={c.t_out*1e6:.2f}")
+    # search-best + H-tree ablation
+    best_on = tiling.search(7168, 7168, htree=True, top_k=1)[0]
+    best_off = tiling.search(7168, 7168, htree=False, top_k=1)[0]
+    emit("fig12/search_best", best_on.total * 1e6, best_on.config.label)
+    out_cut = 1 - best_on.t_out / max(best_off.t_out, 1e-12)
+    emit("fig12/htree_outbound_cut", 0.0,
+         f"{out_cut*100:.0f}%;paper=47% (die-level)")

@@ -1,0 +1,23 @@
+"""Fig. 5: TPOT, conventional vs proposed plane (OPT-30B) + GPU baselines."""
+from repro.core import pimsim
+from repro.core.pimsim import OPT_MODELS
+
+from benchmarks.common import emit
+
+
+def run():
+    m = OPT_MODELS["opt-30b"]
+    flash = pimsim.flash_tpot(m)
+    naive = pimsim.naive_tpot(m)
+    g4090 = pimsim.gpu_tpot(m, "rtx4090")
+    emit("fig5/naive_conventional_plane", naive * 1e6,
+         f"tpot_ms={naive*1e3:.0f};paper=1400ms")
+    emit("fig5/proposed_flash_pim", flash.total * 1e6,
+         f"tpot_ms={flash.total*1e3:.2f};paper~7ms")
+    emit("fig5/speedup_vs_naive", 0.0,
+         f"{naive/flash.total:.0f}x;paper=210x")
+    emit("fig5/rtx4090x4_vllm", g4090 * 1e6,
+         f"speedup={g4090/flash.total:.2f}x;paper=2.5x")
+    for comp, val in [("smvm", flash.smvm), ("dmvm", flash.dmvm),
+                      ("softmax", flash.softmax), ("ln", flash.ln)]:
+        emit(f"fig5/breakdown_{comp}", val * 1e6, "")

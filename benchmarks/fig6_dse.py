@@ -1,0 +1,16 @@
+"""Fig. 6: plane-size DSE — latency / energy / density sweeps + selection."""
+from repro.core.pim import dse, SIZE_A
+
+from benchmarks.common import emit
+
+
+def run():
+    for dim in ("n_row", "n_col", "n_stack"):
+        for pt in dse.sweep_fig6(dim):
+            r = pt.as_row()
+            emit(f"fig6/{dim}={r[dim]}", r["t_pim_us"],
+                 f"energy_nJ={r['energy_nj']:.2f};density={r['density_gb_mm2']:.2f}Gb/mm2")
+    sel = dse.select_plane()
+    emit("fig6/selected_plane", sel.t_pim_s * 1e6,
+         f"{sel.cfg};density={sel.density_gb_mm2:.2f};paper=256x2048x128@12.84")
+    assert (sel.cfg.n_row, sel.cfg.n_col, sel.cfg.n_stack) == (256, 2048, 128)

@@ -1,0 +1,22 @@
+"""Fig. 9: shared bus vs H-tree (a); Size A vs Size B iso-throughput (b)."""
+from repro.core import htree
+
+from benchmarks.common import emit
+
+
+def run():
+    reds = []
+    for name, sh, ht in htree.fig9a_cases():
+        red = 1 - ht.total / sh.total
+        reds.append(red)
+        emit(f"fig9a/{name}_shared", sh.total * 1e6, f"g={sh.g}")
+        emit(f"fig9a/{name}_htree", ht.total * 1e6, f"reduction={red*100:.1f}%")
+    emit("fig9a/mean_reduction", 0.0,
+         f"{sum(reds)/len(reds)*100:.1f}%;paper=46%")
+    ratios = []
+    for name, a, b in htree.fig9b_cases():
+        ratios.append(a.total / b.total)
+        emit(f"fig9b/{name}", a.total * 1e6,
+             f"sizeB_us={b.total*1e6:.2f};A/B={a.total/b.total:.3f}")
+    emit("fig9b/mean_sizeA_overhead", 0.0,
+         f"+{(sum(ratios)/len(ratios)-1)*100:.1f}%;paper=+17%(2x density)")

@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks + BlockSpec tile-shape sweep.
+
+The tile sweep is the TPU analog of the paper's plane-size DSE (Fig. 6):
+block shape determines the claimed VMEM working set and MXU alignment.
+CPU interpret-mode wall times are NOT TPU times; the *structural* outputs
+(VMEM footprint per tile, passes over the weight) are the design signal.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from benchmarks.common import emit, time_fn
+
+
+def _vmem_bytes(bm, bk, bn):
+    return bm * bk + bk * bn * 2 + bm * bn * 4 + bm * bn * 4   # x, hi+lo, acc, out
+
+
+def run():
+    key = jax.random.key(0)
+    M, K, N = 16, 1024, 2048
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.key(1), (K, N)) * 0.3
+    lin = quant.make_quantized_linear(w)
+    x_q, x_s = quant.quantize_activation(x)
+
+    from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+    from repro.kernels.pim_mvm.kernel import pim_mvm_pallas
+    hi, lo = quant.pack_qlc(lin.w_q)
+
+    t = time_fn(lambda: quant.int8_matmul_ref(x_q, x_s, lin))
+    emit("kernel/ref_int8_matmul", t, f"{M}x{K}x{N}")
+
+    for bk, bn in [(128, 512), (256, 256), (512, 512), (128, 128)]:
+        f = jax.jit(lambda xq, xs: pim_mvm_pallas(
+            xq, xs, hi, lo, lin.w_scale, bm=8, bk=bk, bn=bn))
+        t = time_fn(f, x_q, x_s)
+        emit(f"kernel/pim_mvm_bk{bk}_bn{bn}", t,
+             f"vmem_tile_B={_vmem_bytes(8, bk, bn)};passes=8bit-serial")
+    for bk, bn in [(512, 256), (256, 256), (1024, 128)]:
+        f = jax.jit(lambda xq, xs: int8_matmul_pallas(
+            xq, xs, lin.w_q, lin.w_scale, bm=16, bk=bk, bn=bn))
+        t = time_fn(f, x_q, x_s)
+        emit(f"kernel/int8_mm_bk{bk}_bn{bn}", t,
+             f"vmem_tile_B={_vmem_bytes(16, bk, bn)};passes=1")
+    emit("kernel/bitserial_vs_fused_passes", 0.0,
+         "paper array: 8 bit-serial passes (Eq.3 xB_input); MXU: 1 pass")
+    run_ssm()
+
+
+def run_ssm():
+    """SSD chunk-kernel sweep (mamba2/jamba compute hot-spot)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ssm_scan.kernel import ssd_chunk_pallas
+    key = jax.random.key(0)
+    for Q, H, dh, S in [(64, 8, 64, 32), (128, 8, 64, 64)]:
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (2, Q, H, dh))
+        B = jax.random.normal(ks[1], (2, Q, H, S))
+        C = jax.random.normal(ks[2], (2, Q, H, S))
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (2, Q, H)))
+        A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+        D = jnp.ones((H,))
+        h0 = jnp.zeros((2, H, dh, S))
+        t = time_fn(lambda: ssd_chunk_pallas(x, B, C, dt, A, D, h0))
+        vmem = Q * (dh + 2 * S) * 4 + Q * Q * 4 + dh * S * 4
+        emit(f"kernel/ssd_chunk_Q{Q}_S{S}", t,
+             f"vmem_per_headblk_B={vmem};fused decay+scores+state")

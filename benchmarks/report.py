@@ -1,0 +1,94 @@
+"""Generate the EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import ART, ICI_BPS, HBM_BPS, analyse
+
+
+def _load(mesh, variant=None):
+    out = {}
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["mesh"] != mesh:
+            continue
+        v = r.get("variant", "baseline")
+        if (variant or "baseline") != v:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def dryrun_table():
+    print("\n### Dry-run matrix (status / per-device memory / compile)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | arg GiB/dev | temp GiB/dev |")
+    print("|---|---|---|---|---|---|")
+    single = _load("pod16x16")
+    multi = _load("pod2x16x16")
+    for key in sorted(single):
+        r1, r2 = single[key], multi.get(key, {})
+        s1 = r1["status"] if r1["status"] != "ok" else f"ok ({r1['compile_s']}s)"
+        s2 = r2.get("status", "-")
+        if s2 == "ok":
+            s2 = f"ok ({r2['compile_s']}s)"
+        if r1["status"] == "ok":
+            arg = r1["memory"]["argument_bytes"] / 2**30
+            tmp = r1["memory"]["temp_bytes"] / 2**30
+            mem = f"{arg:.2f} | {tmp:.2f}"
+        else:
+            mem = "- | -"
+        print(f"| {key[0]} | {key[1]} | {s1} | {s2} | {mem} |")
+
+
+def roofline_table():
+    print("\n### Roofline (single-pod 16x16, baseline)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO flops | frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(_load("pod16x16").items()):
+        an = analyse(r)
+        if not an:
+            continue
+        print(f"| {a} | {s} | {an['t_compute_s']*1e3:.1f} ms | "
+              f"{an['t_memory_s']*1e3:.1f} ms | {an['t_collective_s']*1e3:.1f} ms | "
+              f"{an['dominant']} | {an['useful_flops_ratio']:.2f} | "
+              f"{an['roofline_fraction']:.3f} |")
+
+
+def variant_table():
+    print("\n### Hillclimb variants (same accounting ruler)\n")
+    print("| cell | variant | memory | collective | frac |")
+    print("|---|---|---|---|---|")
+    base = _load("pod16x16")
+    for variant in (None, "bf16dmvm", "resident", "opt", "seqshard"):
+        rows = _load("pod16x16", variant)
+        for (a, s), r in sorted(rows.items()):
+            if variant and (a, s) not in {
+                ("llama3-8b", "decode_32k"), ("phi3-mini-3.8b", "decode_32k"),
+                ("jamba-1.5-large-398b", "decode_32k"),
+                ("deepseek-v3-671b", "decode_32k"), ("grok-1-314b", "decode_32k"),
+                ("nemotron-4-340b", "train_4k"), ("llama3-8b", "train_4k")}:
+                continue
+            if not variant and (a, s) not in {
+                ("llama3-8b", "decode_32k"), ("phi3-mini-3.8b", "decode_32k"),
+                ("jamba-1.5-large-398b", "decode_32k"),
+                ("deepseek-v3-671b", "decode_32k"), ("grok-1-314b", "decode_32k"),
+                ("nemotron-4-340b", "train_4k"), ("llama3-8b", "train_4k")}:
+                continue
+            an = analyse(r)
+            if not an:
+                continue
+            print(f"| {a}__{s} | {variant or 'baseline'} | "
+                  f"{an['t_memory_s']*1e3:.1f} ms | "
+                  f"{an['t_collective_s']*1e3:.1f} ms | "
+                  f"{an['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    roofline_table()
+    variant_table()

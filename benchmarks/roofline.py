@@ -1,0 +1,127 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)       [per-device cost
+  memory  term    = HLO_bytes / (chips x 819 GB/s)            analysis => drop
+  collective term = collective_bytes / (chips x 50 GB/s)      the chips term]
+
+``compiled.cost_analysis()`` is *per-device* (calibrated in
+tests/EXPERIMENTS.md), so the division by chips is already done.
+Collective bytes are summed from the partitioned HLO's collective ops
+(per-device payloads).  MODEL_FLOPS follows DESIGN.md Sec. 8.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
+HBM_BPS = 819e9              # per chip
+ICI_BPS = 50e9               # per link
+
+
+def ideal_bytes(arch: str, shape_name: str) -> float:
+    """Hand-derived minimum HBM traffic (global, bytes) for the cell —
+    the denominator-side anchor for the memory-roofline fraction.
+
+    decode : every weight byte once (int8) + the whole SLC cache once
+    prefill: weights (bf16) + ~4 passes of the residual stream + cache write
+    train  : fwd+bwd+update weight traffic + optimizer state + remat acts
+    """
+    from repro.configs import registry
+    from repro.configs.shapes import SHAPES
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    Pn = cfg.param_count()
+    B, S, L, d = shape.global_batch, shape.seq_len, cfg.n_layers, cfg.d_model
+
+    def cache_bytes():
+        total = 0.0
+        for i in range(L):
+            if cfg.layer_kind(i) == "ssm":
+                total += B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+            elif cfg.attn_type == "mla":
+                total += B * S * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 1.1
+            else:
+                total += B * S * cfg.n_kv_heads * (cfg.head_dim * 2 + 8)
+        if cfg.encoder_layers:
+            total += L * B * cfg.encoder_seq * cfg.n_kv_heads * (cfg.head_dim * 2 + 8)
+        return total
+
+    if shape.kind == "decode":
+        return Pn * 1.0 + cache_bytes()
+    if shape.kind == "prefill":
+        acts = B * S * d * L * 2.0 * 4
+        return Pn * 2.0 + acts + cache_bytes()
+    opt_b = 4.0 if Pn > 50e9 else 16.0           # int8 vs fp32 Adam moments
+    acts = B * S * d * L * 2.0 * 6
+    return Pn * (2 * 3 + opt_b * 2) + acts
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cost = rec.get("cost_corrected", rec["cost"])   # trip-count-aware recount
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes_accessed", 0.0)
+    coll = rec.get("collectives_corrected", rec["collectives"])
+    coll_dev = coll.get("total", 0)
+    n = rec["n_devices"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BPS
+    t_coll = coll_dev / ICI_BPS
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = rec["model_flops"]
+    useful = model_flops / max(flops_dev * n, 1.0)
+    # roofline fraction: time the *ideal* workload needs under the dominant
+    # resource vs. the modeled time.  compute-bound: useful FLOPs at peak;
+    # memory/collective-bound: hand-derived minimum traffic at full bandwidth.
+    if dominant == "compute":
+        t_ideal = model_flops / n / PEAK_FLOPS
+    else:
+        t_ideal = ideal_bytes(rec["arch"], rec["shape"]) / n / HBM_BPS
+    frac = min(1.0, t_ideal / bound) if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "variant": rec.get("variant", "baseline"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": flops_dev * n,
+        "useful_flops_ratio": useful, "roofline_fraction": frac,
+        "t_ideal_s": t_ideal, "bound_s": bound,
+    }
+
+
+def load_all(mesh: str = "pod16x16") -> list[dict]:
+    out = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        a = analyse(json.loads(p.read_text()))
+        if a:
+            out.append(a)
+    return out
+
+
+def run():
+    rows = load_all()
+    if not rows:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for r in rows:
+        emit(f"roofline/{r['arch']}__{r['shape']}", r["bound_s"] * 1e6,
+             f"dom={r['dominant']};comp={r['t_compute_s']*1e3:.2f}ms;"
+             f"mem={r['t_memory_s']*1e3:.2f}ms;coll={r['t_collective_s']*1e3:.2f}ms;"
+             f"useful={r['useful_flops_ratio']:.3f};frac={r['roofline_fraction']:.3f}")
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    collb = max(rows, key=lambda r: r["t_collective_s"] /
+                max(r["bound_s"], 1e-12))
+    emit("roofline/worst_fraction", 0.0,
+         f"{worst['arch']}__{worst['shape']}={worst['roofline_fraction']:.3f}")
+    emit("roofline/most_collective_bound", 0.0,
+         f"{collb['arch']}__{collb['shape']}")

@@ -1,0 +1,23 @@
+"""Benchmark aggregator: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig5_tpot, fig6_dse, fig9_htree, fig12_tiling,
+                            fig14_opt, table2_area, kernel_bench, roofline,
+                            arch_tpot)
+    print("name,us_per_call,derived")
+    for mod in (fig6_dse, fig9_htree, fig12_tiling, fig5_tpot, fig14_opt,
+                table2_area, arch_tpot, kernel_bench, roofline):
+        try:
+            mod.run()
+        except Exception as e:  # keep the suite going; fail loudly at the end
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}")
+            raise
+
+
+if __name__ == '__main__':
+    main()

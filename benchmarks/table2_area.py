@@ -1,0 +1,18 @@
+"""Table II: area breakdown of peripherals + under-array fit."""
+from repro.core.pim import SIZE_A, area
+
+from benchmarks.common import emit
+
+
+def run():
+    ab = area.plane_area(SIZE_A)
+    emit("table2/hv_peri_mm2", 0.0,
+         f"{ab.hv_peri_mm2:.6f};ratio={ab.ratio(ab.hv_peri_mm2)*100:.2f}%;paper=21.62%")
+    emit("table2/lv_peri_mm2", 0.0,
+         f"{ab.lv_peri_mm2:.6f};ratio={ab.ratio(ab.lv_peri_mm2)*100:.2f}%;paper=23.16%")
+    emit("table2/rpu_htree_mm2", 0.0,
+         f"{ab.rpu_htree_mm2:.6f};ratio={ab.ratio(ab.rpu_htree_mm2)*100:.2f}%;paper=0.39%")
+    emit("table2/fits_under_array", 0.0, str(ab.fits_under_array))
+    lo, hi = area.die_budget_mm2()
+    emit("table2/die_area_mm2", 0.0,
+         f"{area.die_area_mm2(SIZE_A):.2f};budget={lo:.1f}-{hi:.1f};paper=4.98 in 5.6-7.5")

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable  # noqa: F401

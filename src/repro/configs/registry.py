@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    whisper_tiny, deepseek_v3_671b, grok1_314b, jamba15_large_398b,
+    nemotron4_340b, granite3_8b, llama3_8b, phi3_mini_3_8b, mamba2_2_7b,
+    chameleon_34b, opt,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    "whisper-tiny": whisper_tiny.CONFIG,
+    "deepseek-v3-671b": deepseek_v3_671b.CONFIG,
+    "grok-1-314b": grok1_314b.CONFIG,
+    "jamba-1.5-large-398b": jamba15_large_398b.CONFIG,
+    "nemotron-4-340b": nemotron4_340b.CONFIG,
+    "granite-3-8b": granite3_8b.CONFIG,
+    "llama3-8b": llama3_8b.CONFIG,
+    "phi3-mini-3.8b": phi3_mini_3_8b.CONFIG,
+    "mamba2-2.7b": mamba2_2_7b.CONFIG,
+    "chameleon-34b": chameleon_34b.CONFIG,
+    # the paper's own model (not part of the assigned 10, used by examples)
+    "opt-30b": opt.CONFIG,
+    "opt-125m": opt.OPT_125M,
+}
+
+ASSIGNED = [k for k in ARCHS if not k.startswith("opt")]
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,114 @@
+"""QLC-SLC hybrid KV cache (Sec. IV-A, Fig. 10d).
+
+Weights live in the dense, never-written "QLC region" (int8, nibble-packable)
+while the KV cache lives in the fast-append "SLC region": int8 entries with
+per-(token, head) scales, appended in place every generated token.  On TPU
+the SLC region is an int8 buffer updated with ``dynamic_update_slice`` —
+cheap, constant-time appends, exactly the paper's write-friendly role.
+
+Layouts (per layer, stacked over layers as the leading axis):
+  k_q, v_q     : [L, B, S_max, H_kv, D_h]  int8
+  k_s, v_s     : [L, B, S_max, H_kv, 1]    f32
+  (MLA latent) : [L, B, S_max, C_latent]   int8 (+ scale)
+SSM layers instead carry a fixed-size recurrent state — the most
+flash-write-friendly cache of all (constant footprint; see DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import quantize_kv
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k_q: jax.Array
+    k_s: jax.Array
+    v_q: jax.Array
+    v_s: jax.Array
+    length: jax.Array            # [] int32 — tokens currently cached
+
+    @property
+    def max_len(self) -> int:
+        return self.k_q.shape[2]
+
+
+def init_cache(n_layers: int, batch: int, max_len: int, n_kv_heads: int,
+               head_dim: int) -> KVCache:
+    shape = (n_layers, batch, max_len, n_kv_heads, head_dim)
+    sshape = (n_layers, batch, max_len, n_kv_heads, 1)
+    return KVCache(
+        k_q=jnp.zeros(shape, jnp.int8),
+        k_s=jnp.zeros(sshape, jnp.float32),
+        v_q=jnp.zeros(shape, jnp.int8),
+        v_s=jnp.zeros(sshape, jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def append_layer(cache: KVCache, layer: int, k: jax.Array, v: jax.Array,
+                 pos: jax.Array) -> KVCache:
+    """Append one step's k/v ([B, T, H_kv, D_h] float) at position ``pos``."""
+    k_q, k_s = quantize_kv(k)
+    v_q, v_s = quantize_kv(v)
+    idx = (layer, 0, pos, 0, 0)
+    return dataclasses.replace(
+        cache,
+        k_q=jax.lax.dynamic_update_slice(cache.k_q, k_q[None], idx),
+        k_s=jax.lax.dynamic_update_slice(cache.k_s, k_s[None], idx),
+        v_q=jax.lax.dynamic_update_slice(cache.v_q, v_q[None], idx),
+        v_s=jax.lax.dynamic_update_slice(cache.v_s, v_s[None], idx),
+    )
+
+
+def bump_length(cache: KVCache, n: int = 1) -> KVCache:
+    return dataclasses.replace(cache, length=cache.length + n)
+
+
+def layer_view(cache: KVCache, layer: int) -> tuple[jax.Array, ...]:
+    return (cache.k_q[layer], cache.k_s[layer],
+            cache.v_q[layer], cache.v_s[layer])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LatentCache:
+    """MLA compressed-latent cache (DeepSeek-V3): the SLC region holds the
+    576-dim latent instead of per-head K/V — ~14x smaller appends."""
+    c_q: jax.Array               # [L, B, S_max, C] int8
+    c_s: jax.Array               # [L, B, S_max, 1] f32
+    length: jax.Array
+
+    @property
+    def max_len(self) -> int:
+        return self.c_q.shape[2]
+
+
+def init_latent_cache(n_layers: int, batch: int, max_len: int, dim: int) -> LatentCache:
+    return LatentCache(
+        c_q=jnp.zeros((n_layers, batch, max_len, dim), jnp.int8),
+        c_s=jnp.zeros((n_layers, batch, max_len, 1), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def append_latent(cache: LatentCache, layer: int, c: jax.Array,
+                  pos: jax.Array) -> LatentCache:
+    amax = jnp.max(jnp.abs(c), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    c_q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+    idx = (layer, 0, pos, 0)
+    return dataclasses.replace(
+        cache,
+        c_q=jax.lax.dynamic_update_slice(cache.c_q, c_q[None], idx),
+        c_s=jax.lax.dynamic_update_slice(cache.c_s, scale[None], idx),
+    )
+
+
+def cache_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

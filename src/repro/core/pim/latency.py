@@ -1,0 +1,64 @@
+"""Latency models: Eq. (1) page read, Eq. (3) PIM op, Eq. (5) components."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.pim import params as P
+from repro.core.pim import rc as rcmod
+from repro.core.pim.params import PlaneConfig, horowitz
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBreakdown:
+    t_dec_wl: float
+    t_dec_bls: float
+    t_pre: float
+    t_sense: float
+    t_accum: float
+    t_dis: float
+
+    @property
+    def per_bit(self) -> float:
+        """One input-bit pass: max(t_decBLS, t_pre) + sense + accum + dis."""
+        return max(self.t_dec_bls, self.t_pre) + self.t_sense + self.t_accum + self.t_dis
+
+
+def components(cfg: PlaneConfig) -> LatencyBreakdown:
+    """Eq. (5a-c) with the Horowitz delay h(tau) ~ tau^1.5."""
+    rc = rcmod.extract(cfg)
+    # Eq. (5a): switch driving n_col precharge gates + BL RC precharge.
+    t_pre = horowitz(P.R_SWITCH * rc.c_precharge_gates) + horowitz(
+        rc.r_bl * (rc.c_bl / 2.0 + rc.c_string_total)
+    )
+    # Eq. (5b): distributed BLS line.
+    t_dec_bls = horowitz(rc.r_bls * rc.c_bls / 2.0)
+    # Eq. (5c): pass transistor driving the WL plate + staircase.
+    t_dec_wl = horowitz(P.R_SWITCH * (rc.c_cell + rc.c_stair))
+    return LatencyBreakdown(
+        t_dec_wl=t_dec_wl,
+        t_dec_bls=t_dec_bls,
+        t_pre=t_pre,
+        t_sense=P.T_SENSE_PIM,
+        t_accum=P.T_ACCUM,
+        t_dis=P.T_DIS,
+    )
+
+
+def t_pim(cfg: PlaneConfig, b_input: int = P.A_BITS) -> float:
+    """Eq. (3): T_PIM = t_decWL + (max(t_decBLS, t_pre)+sense+accum+dis) * B_input."""
+    lb = components(cfg)
+    return lb.t_dec_wl + lb.per_bit * b_input
+
+
+def t_read(cfg: PlaneConfig) -> float:
+    """Eq. (1): regular page read.
+
+    A cell storing ``b_cell`` bits needs ``(2**b_cell - 1) / b_cell``
+    reference-level sense passes per logical page on average (QLC: 3.75,
+    SLC: 1), which is what separates Z-NAND-class SLC reads from 20-50 us
+    conventional QLC reads.
+    """
+    lb = components(cfg)
+    n_pass = ((1 << cfg.b_cell) - 1) / cfg.b_cell
+    per_pass = max(lb.t_dec_bls, lb.t_pre) + P.T_SENSE_READ
+    return lb.t_dec_wl + per_pass * n_pass + lb.t_dis

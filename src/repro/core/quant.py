@@ -1,0 +1,148 @@
+"""W8A8 quantization + QLC nibble packing (Sec. IV-A, SmoothQuant [15]).
+
+The paper stores 8-bit weights across **two QLC cells** (4 bits each) and
+recombines them with a shift-adder.  We mirror that exactly:
+
+  w_int8 = hi * 16 + lo,   hi = w >> 4  (signed 4-bit, [-8, 7])
+                           lo = w & 15  (unsigned 4-bit, [0, 15])
+
+so the bit-serial Pallas kernel can operate on the two nibble planes
+independently and shift-add, integer-exactly reproducing Eq. (2).
+
+Activations are quantized dynamically per token (symmetric int8) after a
+SmoothQuant-style migration: per-channel smoothing factors
+``s = amax_act**alpha / amax_w**(1-alpha)`` are folded into the weights, so
+runtime only sees the already-smoothed tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """A PIM-resident ("QLC region") linear layer: int8 weights + scales."""
+
+    w_q: jax.Array          # int8 [in, out]
+    w_scale: jax.Array      # f32  [out]     (per-output-channel)
+    smooth: jax.Array | None = None  # f32 [in], folded activation smoothing
+
+    def tree_flatten(self):  # pragma: no cover - pytree plumbing
+        return (self.w_q, self.w_scale, self.smooth), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedLinear, QuantizedLinear.tree_flatten, QuantizedLinear.tree_unflatten
+)
+
+
+def quantize_weight(w: jax.Array, axis: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization.
+
+    ``axis`` is the *contraction* axis of ``w`` ([in, out] -> axis=0).
+    Returns (w_q int8, scale f32 broadcastable over the output channels).
+    """
+    amax = jnp.max(jnp.abs(w), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    w_q = jnp.clip(jnp.round(w / jnp.expand_dims(scale, axis)), -127, 127)
+    return w_q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_activation(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dynamic symmetric per-token int8 quantization (last axis = features)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    x_q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return x_q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def smooth_factors(act_amax: jax.Array, w_amax: jax.Array,
+                   alpha: float = 0.5) -> jax.Array:
+    """SmoothQuant migration strength (Eq. 4 of [15])."""
+    s = (jnp.maximum(act_amax, 1e-5) ** alpha) / (jnp.maximum(w_amax, 1e-5) ** (1 - alpha))
+    return jnp.clip(s, 1e-2, 1e2)
+
+
+def make_quantized_linear(w: jax.Array, act_amax: jax.Array | None = None,
+                          alpha: float = 0.5) -> QuantizedLinear:
+    """Quantize a [in, out] weight, optionally smoothing with activation stats."""
+    smooth = None
+    if act_amax is not None:
+        w_amax = jnp.max(jnp.abs(w), axis=1)
+        smooth = smooth_factors(act_amax, w_amax, alpha)
+        w = w * smooth[:, None]
+    w_q, w_scale = quantize_weight(w, axis=0)
+    return QuantizedLinear(w_q=w_q, w_scale=w_scale, smooth=smooth)
+
+
+# ---------------------------------------------------------------------------
+# QLC nibble packing (two 4-bit cells per 8-bit weight)
+# ---------------------------------------------------------------------------
+def pack_qlc(w_q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split int8 weights into (hi, lo) QLC nibble planes.
+
+    hi is the signed high nibble in [-8, 7]; lo the unsigned low nibble in
+    [0, 15].  ``w == hi * 16 + lo`` exactly.
+    """
+    assert w_q.dtype == jnp.int8
+    w32 = w_q.astype(jnp.int32)
+    hi = jnp.right_shift(w32, 4)           # arithmetic shift keeps the sign
+    lo = jnp.bitwise_and(w32, 15)
+    return hi.astype(jnp.int8), lo.astype(jnp.int8)
+
+
+def unpack_qlc(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return (hi.astype(jnp.int32) * 16 + lo.astype(jnp.int32)).astype(jnp.int8)
+
+
+def input_bitplanes(x_q: jax.Array, bits: int = 8) -> jax.Array:
+    """Decompose int8 activations into ``bits`` 0/1 planes (bit-serial input).
+
+    Two's complement: plane ``bits-1`` carries weight ``-2**(bits-1)``.
+    Returns int32 [bits, ...x.shape].
+    """
+    xu = x_q.astype(jnp.int32) & 0xFF      # two's-complement byte
+    planes = jnp.stack([(xu >> b) & 1 for b in range(bits)])
+    return planes
+
+
+def bit_weights(bits: int = 8) -> jnp.ndarray:
+    w = jnp.array([1 << b for b in range(bits)], dtype=jnp.int32)
+    return w.at[bits - 1].set(-(1 << (bits - 1)))   # sign bit
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (the "SLC region", Sec. IV-A)
+# ---------------------------------------------------------------------------
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8; x: [..., heads, head_dim]."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@partial(jax.jit, static_argnames=("out_dtype",))
+def int8_matmul_ref(x_q: jax.Array, x_scale: jax.Array, lin: QuantizedLinear,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """Reference W8A8 matmul: int32 accumulate, fp dequant epilogue."""
+    acc = jax.lax.dot_general(
+        x_q, lin.w_q,
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * x_scale * lin.w_scale).astype(out_dtype)

@@ -1,0 +1,97 @@
+"""Flash-decoding Pallas kernel over the int8 SLC KV cache (dMVM).
+
+Grid: (batch, kv-head group, seq blocks).  Each step performs the paper's
+two dMVM roles on one KV block:
+
+  * ``q . K^T`` — integer VVMs: int8 q x int8 K block -> int32, descale
+    (the SLC page read + RPU stream multiply of Fig. 13b-c);
+  * ``S . V``   — the row-wise product: per-position softmax weights scale V
+    rows and accumulate (Fig. 13e-f), so the growing sequence axis is
+    streamed, never transposed.
+
+Running (max, denom, acc) streaming-softmax state lives in VMEM scratch and
+persists across the (sequential) seq-block grid dimension, finalising on the
+last block — the same one-pass rescaling the H-tree RPUs pipeline.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, d: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.int32)                 # [rep, D]
+    k = k_ref[...].astype(jnp.int32)                 # [bs, D]
+    s_int = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.int32)  # [rep, bs]
+    scores = (s_int.astype(jnp.float32) * qs_ref[...]
+              * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)                       # [rep, bs]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    vf = v_ref[...].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, vf, preferred_element_type=jnp.float32)    # row-wise product (SV)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _final():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, length, *,
+                       bs: int = BLOCK_S, interpret: bool = True):
+    """q_q: [B,G,rep,D] int8; q_s: [B,G,rep,1] f32; k_q/v_q: [B,S,G,D] int8;
+    k_s/v_s: [B,S,G] f32; length: [1] int32 -> out [B,G,rep,D] f32."""
+    B, G, rep, D = q_q.shape
+    S = k_q.shape[1]
+    bs = min(bs, S)
+    n_s = pl.cdiv(S, bs)
+    grid = (B, G, n_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s, bs=bs, d=D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # length
+            pl.BlockSpec((None, None, rep, D), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, rep, 1), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, D), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, rep, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(length, q_q, q_s, k_q, k_s, v_q, v_s)

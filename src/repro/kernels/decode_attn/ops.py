@@ -1,0 +1,24 @@
+"""jit'd wrapper: model-facing decode attention -> Pallas flash-decoding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels.decode_attn import kernel as K
+
+
+def decode_attention(q, k_q, k_s, v_q, v_s, length, interpret: bool = True):
+    """q: [B,1,H,D] float; k_q/v_q: [B,S,G,D] int8; k_s/v_s: [B,S,G,1] f32;
+    length: scalar int32 -> [B,1,H,D]."""
+    B, _, H, D = q.shape
+    G = k_q.shape[2]
+    rep = H // G
+    qh = q.reshape(B, H, D)
+    q_q, q_s = quant.quantize_kv(qh)
+    q_q = q_q.reshape(B, G, rep, D)
+    q_s = q_s.reshape(B, G, rep, 1)
+    ln = jnp.asarray(length, jnp.int32).reshape(1)
+    out = K.decode_attn_pallas(q_q, q_s, k_q, k_s[..., 0], v_q, v_s[..., 0],
+                               ln, interpret=interpret)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Oracle for the fused W8A8 matmul: int32 accumulate + fp32 dequant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref(x_q, w_q, x_s, w_s, out_dtype=jnp.float32):
+    acc = jax.lax.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the bit-serial QLC PIM MVM (Eq. 2).
+
+Two formulations, both integer-exact:
+  * ``ref_int``       — direct int32 matmul on reconstructed weights.
+  * ``ref_bitserial`` — the paper's dataflow: 8 input bit-planes x 2 weight
+    nibble planes, shift-add accumulation (what the PIM array + shift-adders
+    + H-tree RPUs physically compute).
+They must agree bit-for-bit; the Pallas kernel is validated against both.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def ref_int(x_q, w_hi, w_lo, x_s, w_s, out_dtype=jnp.float32):
+    """x_q: [M,K] int8; w_hi/w_lo: [K,N] nibble planes; x_s: [M,1]; w_s: [N]."""
+    w = w_hi.astype(jnp.int32) * 16 + w_lo.astype(jnp.int32)
+    acc = jnp.dot(x_q.astype(jnp.int32), w)
+    return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)
+
+
+def ref_bitserial(x_q, w_hi, w_lo, x_s, w_s, bits: int = 8,
+                  out_dtype=jnp.float32):
+    planes = quant.input_bitplanes(x_q, bits)           # [bits, M, K] 0/1
+    bw = quant.bit_weights(bits)                        # [bits] (sign bit negative)
+    acc = jnp.zeros((x_q.shape[0], w_hi.shape[1]), jnp.int32)
+    for b in range(bits):
+        hi_dp = jnp.dot(planes[b], w_hi.astype(jnp.int32))   # BL dot product (hi cell)
+        lo_dp = jnp.dot(planes[b], w_lo.astype(jnp.int32))   # BL dot product (lo cell)
+        acc = acc + bw[b] * (16 * hi_dp + lo_dp)             # shift-adders
+    return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)

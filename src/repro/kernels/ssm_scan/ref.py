@@ -1,0 +1,34 @@
+"""Oracle for the intra-chunk SSD kernel (Mamba2, arXiv:2405.21060 Sec. 6).
+
+One chunk of the state-space-duality decomposition:
+
+  y[q] = sum_{k<=q} C[q]·B[k] * exp(cs[q]-cs[k]) * (x[k]*dt[k])
+         + C[q]·h_in * exp(cs[q])  +  D * x[q]
+
+where cs = cumsum(dt*A) within the chunk and h_in is the inter-chunk
+recurrent state.  Also emits the chunk's state contribution
+  S = sum_k B[k] ⊗ (x[k]*dt[k]) * exp(cs[-1]-cs[k]).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_chunk(x, B, C, dt, A, D, h_in):
+    """x: [Q,H,dh]; B,C: [Q,H,S]; dt: [Q,H]; A,D: [H]; h_in: [H,dh,S].
+    Returns (y [Q,H,dh], S_out [H,dh,S], decay [H])."""
+    la = dt * A[None, :]                                     # [Q,H]
+    cs = jnp.cumsum(la, axis=0)
+    xdt = x * dt[..., None]
+    Q = x.shape[0]
+    Ldec = jnp.exp(cs[:, None, :] - cs[None, :, :])          # [Q,K,H]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(tril[..., None], Ldec, 0.0)
+    scores = jnp.einsum("qhs,khs->qkh", C, B) * Ldec
+    y = jnp.einsum("qkh,khd->qhd", scores, xdt)
+    y = y + jnp.einsum("qhs,hds->qhd", C * jnp.exp(cs)[..., None], h_in)
+    y = y + D[None, :, None] * x
+    decay_end = jnp.exp(cs[-1:, :] - cs)                     # [Q,H]
+    S_out = jnp.einsum("khs,khd->hds", B * decay_end[..., None], xdt)
+    chunk_decay = jnp.exp(cs[-1, :])
+    return y, S_out, chunk_decay

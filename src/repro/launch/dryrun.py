@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, recording memory_analysis / cost_analysis / collective bytes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json — consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.transformer import Runtime
+from repro.optim.adamw import AdamW
+from repro.serve.quantize import quantize_tree
+from repro.train.train_step import make_train_step, opt_state_shardings
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out: dict[str, int] = {}
+    for shape_str, op in _COLL_RE.findall(hlo_text):
+        out[op] = out.get(op, 0) + _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+VARIANTS = {
+    "baseline": {},
+    # SecPerf hillclimb variants (EXPERIMENTS.md):
+    "resident": {"serve_resident_moe": True},          # experts never move
+    "bf16dmvm": {"dmvm_dtype": jnp.bfloat16},          # SLC intermediates bf16
+    "seqshard": {"seq_shard": True},                   # sequence-parallel acts
+    "htree": {"collective": "htree"},                  # tree all-reduce combine
+    "opt": {"serve_resident_moe": True, "dmvm_dtype": jnp.bfloat16,
+            "seq_shard": True},
+    "opt_htree": {"serve_resident_moe": True, "dmvm_dtype": jnp.bfloat16,
+                  "collective": "htree"},
+}
+
+
+def _runtime(mesh, kind: str, variant: str = "baseline") -> Runtime:
+    dp = SH.data_axes(mesh)
+    kw = dict(VARIANTS[variant])
+    return Runtime(mesh=mesh, data_axes=dp, remat=(kind == "train"), **kw)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               variant: str = "baseline"):
+    """Returns (fn, args, in_shardings, out_shardings)."""
+    rt = _runtime(mesh, shape.kind, variant)
+    specs = M.input_specs(cfg, shape)
+    batch_sh = SH.input_shardings(cfg, shape, specs, mesh)
+    params_abs = M.abstract_params(cfg, dtype=jnp.bfloat16)
+    rep = SH.replicated(mesh)
+
+    if shape.kind == "train":
+        param_sh = SH.param_shardings(cfg, params_abs, mesh)
+        opt = AdamW(quantized_state=cfg.param_count() > 50e9)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = opt_state_shardings(opt, params_abs, param_sh, mesh)
+        # microbatch gradient accumulation bounds per-device activation
+        # residuals to ~4k tokens/device per backward (see EXPERIMENTS.md)
+        dp_total = 1
+        for a in SH.data_axes(mesh):
+            dp_total *= mesh.shape[a]
+        tokens_per_dev = shape.global_batch * shape.seq_len // dp_total
+        mb = 1
+        while (mb < shape.global_batch and shape.global_batch % (mb * 2) == 0
+               and tokens_per_dev // mb > 4096):
+            mb *= 2
+        step = make_train_step(cfg, rt, opt, microbatches=mb)
+        return (step, (params_abs, opt_abs, specs),
+                (param_sh, opt_sh, batch_sh),
+                (param_sh, opt_sh, {"loss": rep, "grad_norm": rep}))
+
+    if shape.kind == "prefill":
+        param_sh = SH.param_shardings(cfg, params_abs, mesh)
+        max_len = shape.seq_len
+
+        def fn(p, b):
+            return M.prefill(p, cfg, b, max_len, rt)
+
+        out_abs = jax.eval_shape(fn, params_abs, specs)
+        state_sh = SH.decode_state_shardings(cfg, shape, out_abs[1], mesh)
+        logits_sh = _logits_sharding(cfg, shape, mesh)
+        return fn, (params_abs, specs), (param_sh, batch_sh), (logits_sh, state_sh)
+
+    # decode: quantized "QLC" weights + int8 SLC cache
+    qparams_abs = jax.eval_shape(quantize_tree, params_abs)
+    qparam_sh = SH.param_shardings(cfg, qparams_abs, mesh,
+                                   serve=rt.serve_resident_moe)
+    state_abs = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    state_sh = SH.decode_state_shardings(cfg, shape, state_abs, mesh)
+
+    def fn(p, s, t):
+        return M.decode_step(p, cfg, s, t, rt)
+
+    tok_sh = batch_sh["token"]
+    logits_sh = _logits_sharding(cfg, shape, mesh)
+    return (fn, (qparams_abs, state_abs, specs["token"]),
+            (qparam_sh, state_sh, tok_sh), (logits_sh, state_sh))
+
+
+def _logits_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b = SH.batch_entry(shape.global_batch, mesh)
+    v = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(b, v))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
+             variant: str = "baseline") -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = ART / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "variant": variant,
+           "kind": shape.kind, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count(),
+           "model_flops": M.model_flops(cfg, shape)}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(out_path, rec)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh = build_step(cfg, shape, mesh, variant)
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_heap_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not support it
+            mem_rec = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis() or {}
+            cost_rec = {k: float(v) for k, v in cost.items()
+                        if isinstance(v, (int, float)) and k in
+                        ("flops", "bytes accessed", "transcendentals",
+                         "utilization operand 0 {}", "bytes accessed output {}")}
+            cost_rec["flops"] = float(cost.get("flops", 0.0))
+            cost_rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        except Exception as e:
+            cost_rec = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        # trip-count-aware recount (XLA cost_analysis counts scan bodies once)
+        from repro.launch import hlo_cost
+        corrected = hlo_cost.analyse_text(hlo)
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem_rec,
+                   cost=cost_rec, cost_corrected=corrected,
+                   collectives=coll,
+                   collectives_corrected=corrected["collectives"],
+                   n_devices=mesh.devices.size)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    _save(out_path, rec)
+    return rec
+
+
+def _save(path: Path, rec: dict):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in registry.ASSIGNED:
+            for sname in SHAPES:
+                cells.append((arch, sname))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, sname in cells:
+        for mp in meshes:
+            t0 = time.time()
+            rec = run_cell(arch, sname, mp, force=args.force,
+                           variant=args.variant)
+            status = rec.get("status")
+            extra = (f"compile={rec.get('compile_s')}s" if status == "ok"
+                     else rec.get("reason", rec.get("error", ""))[:120])
+            print(f"[{time.strftime('%H:%M:%S')}] {arch} x {sname} x "
+                  f"{'2x16x16' if mp else '16x16'}: {status} ({extra}) "
+                  f"[{time.time()-t0:.0f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body **once**, so any
+scan-over-layers model is undercounted by ~n_layers x.  This walker parses
+the post-partitioning HLO text, recovers each loop's trip count from its
+condition computation (the ``constant(N)`` the induction variable compares
+against), and accumulates
+
+    flops            — dot ops: 2 * numel(result) * contracted dims
+    bytes            — operand+result bytes of every materialising op
+                       (fusion internals excluded: a fusion reads its
+                       operands and writes its result, per XLA's own model)
+    collective bytes — per collective kind, result-shape bytes
+
+each multiplied by the product of enclosing trip counts.  Validated against
+``cost_analysis`` on loop-free graphs (tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(\([^)]*\))?\s*->.*{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_PARAM = re.compile(r"([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)")
+_CALLED = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota",
+               "while", "conditional", "call"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(shape_str: str) -> tuple[list[int], str]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return [], ""
+    dt, dims = m.groups()
+    return [int(d) for d in dims.split(",") if d], dt
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] += v * mult
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[_Instr]] = {}
+        self.params: dict[str, dict[str, str]] = {}
+        self._parse(text)
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if stripped.endswith("{") and "->" in stripped and "=" not in \
+                    stripped.split("->")[0].split("(")[0]:
+                head = stripped
+                if head.startswith("ENTRY"):
+                    head = head[len("ENTRY"):].strip()
+                name = head.split("(")[0].strip().lstrip("%").strip()
+                cur = name
+                self.comps[cur] = []
+                self.params[cur] = {}
+                continue
+            if cur is None:
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            mi = _INSTR.match(line)
+            if mi:
+                name, shape, op, rest = mi.groups()
+                self.comps[cur].append(_Instr(name, shape, op, rest))
+                if op == "parameter":
+                    self.params[cur][name] = shape
+
+    # ------------------------------------------------------------------ #
+    def _shape_table(self, comp: str) -> dict[str, str]:
+        table = dict(self.params.get(comp, {}))
+        for ins in self.comps[comp]:
+            table[ins.name] = ins.shape
+            if ins.op == "parameter":
+                table[ins.name] = ins.shape
+        return table
+
+    def _trip_count(self, while_rest: str, cond_comp: str | None) -> int:
+        m = re.search(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"', while_rest)
+        if m:
+            return int(m.group(1))
+        best = 1
+        for ins in self.comps.get(cond_comp or "", []):
+            if ins.op == "constant":
+                mm = re.match(r"(\d+)", ins.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total            # break cycles defensively
+        table = self._shape_table(comp)
+        for ins in self.comps.get(comp, []):
+            called = _CALLED.findall(ins.rest)
+            if ins.op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = self._trip_count(ins.rest, cond)
+                if body in self.comps:
+                    total.add(self.cost_of(body), trips)
+                continue
+            if ins.op == "fusion":
+                for c in called:
+                    if c in self.comps:
+                        sub = self.cost_of(c)
+                        total.flops += sub.flops
+                        total.transcendentals += sub.transcendentals
+                        total.add(Cost(collectives=sub.collectives))
+                total.bytes += self._io_bytes(ins, table)
+                continue
+            if ins.op in ("call", "conditional", "async-start", "custom-call"):
+                for c in called:
+                    if c in self.comps:
+                        total.add(self.cost_of(c))
+                if ins.op != "call":
+                    total.bytes += self._io_bytes(ins, table)
+                continue
+            if ins.op == "dot":
+                lhs = _OPERAND.findall(ins.rest)
+                contract = 1
+                mcd = _CONTRACT.search(ins.rest)
+                if lhs and mcd:
+                    dims, _ = _dims_of(table.get(lhs[0], ""))
+                    for d in mcd.group(1).split(","):
+                        if d and int(d) < len(dims):
+                            contract *= dims[int(d)]
+                out_elems = 0
+                dims, dt = _dims_of(ins.shape)
+                n = 1
+                for d in dims:
+                    n *= d
+                out_elems = n
+                total.flops += 2.0 * out_elems * contract
+                total.bytes += self._io_bytes(ins, table)
+                continue
+            if ins.op in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                          "logistic", "power", "sine", "cosine"):
+                dims, _ = _dims_of(ins.shape)
+                n = 1
+                for d in dims:
+                    n *= d
+                total.transcendentals += n
+            if ins.op in _COLLECTIVES:
+                kind = ins.op.replace("-start", "")
+                b = _bytes_of(ins.shape)
+                total.collectives[kind] += b
+                total.collectives["total"] += b
+                total.bytes += self._io_bytes(ins, table)
+                continue
+            if ins.op not in _SKIP_BYTES:
+                total.bytes += self._io_bytes(ins, table)
+        self._memo[comp] = total
+        return total
+
+    def _io_bytes(self, ins: _Instr, table: dict[str, str]) -> float:
+        arg_str = ins.rest.split(")", 1)[0]
+        op_bytes = [_bytes_of(table.get(opn, ""))
+                    for opn in _OPERAND.findall(arg_str)]
+        b = float(_bytes_of(ins.shape)) + sum(op_bytes)
+        # dynamic-update-slice executes in place on loop-carried buffers
+        # (TPU buffer aliasing): real traffic is read+write of the *updated
+        # extent* (the smallest operand), not the whole buffer.
+        if (ins.op == "dynamic-update-slice"
+                or "dynamic_update_slice" in ins.rest):
+            nonzero = [x for x in op_bytes if x > 0]
+            b = 2.0 * (min(nonzero) if nonzero else _bytes_of(ins.shape))
+        # dynamic-slice reads only the slice, not the whole operand
+        # (e.g. one layer's weights out of the stacked scan parameter)
+        elif (ins.op in ("dynamic-slice", "slice")
+              or "dynamic_slice" in ins.rest):
+            b = 2.0 * _bytes_of(ins.shape)
+        return b
+
+    def entry_cost(self) -> Cost:
+        # the ENTRY computation is typically named 'main...' and is the one
+        # not called by anyone; find it by name heuristics first
+        called = set()
+        for comp, instrs in self.comps.items():
+            for ins in instrs:
+                called.update(_CALLED.findall(ins.rest))
+        roots = [c for c in self.comps if c not in called]
+        entry = None
+        for c in roots:
+            if c.startswith("main") or ".main" in c:
+                entry = c
+                break
+        entry = entry or (roots[0] if roots else next(iter(self.comps)))
+        return self.cost_of(entry)
+
+
+def analyse_text(hlo_text: str) -> dict:
+    c = HloModule(hlo_text).entry_cost()
+    return {"flops": c.flops, "bytes_accessed": c.bytes,
+            "transcendentals": c.transcendentals,
+            "collectives": {k: v for k, v in c.collectives.items()}}

@@ -1,0 +1,78 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 100 \
+        [--reduced] [--batch 8] [--seq 128] [--ckpt-dir /tmp/ck]
+
+On the CPU dev box use --reduced; on a real fleet the same script runs the
+full config over the production mesh (repro.launch.mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import SyntheticTokens
+from repro.ft.failures import ResilientRunner
+from repro.models import model as M
+from repro.models.transformer import Runtime
+from repro.optim.adamw import AdamW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    data = SyntheticTokens(cfg, shape, seed=0)
+    params = M.init_params(jax.random.key(0), cfg)
+    opt = AdamW(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                total_steps=args.steps)
+    opt_state = opt.init(params)
+
+    from repro.train.train_step import make_train_step
+    step = jax.jit(make_train_step(cfg, Runtime(), opt,
+                                   microbatches=args.microbatches))
+
+    start = 0
+    if args.resume:
+        from repro.ckpt import checkpoint as C
+        last = C.latest_step(args.ckpt_dir)
+        if last is not None:
+            state, extra = C.restore(args.ckpt_dir,
+                                     {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = extra["data_step"]
+            print(f"resumed from step {start}")
+
+    runner = ResilientRunner(step_fn=step, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    params, opt_state, log = runner.run(params, opt_state, data, args.steps,
+                                        start_step=start)
+    dt = time.time() - t0
+    for m in log[:3] + log[-3:]:
+        print(f"step {m['step']}: loss={m['loss']:.4f} ({m['dt']*1e3:.0f} ms)")
+    toks = (args.steps - start) * args.batch * args.seq
+    print(f"done: {args.steps} steps, {toks/dt:.0f} tok/s, "
+          f"stragglers={len(runner.watchdog.events)}")
+
+
+if __name__ == "__main__":
+    main()

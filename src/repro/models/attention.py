@@ -1,0 +1,277 @@
+"""Attention: GQA / MHA / MLA; chunked (flash-style) training attention and
+int8-KV decode attention (the paper's dMVM, Sec. IV-B / Fig. 13).
+
+Decode attention computes ``q . K^T`` and ``S . V`` directly against the int8
+"SLC-region" cache: scores accumulate in int8 x int8 -> int32 and are
+descaled, exactly the flash-PIM dataflow (q broadcast over K rows = VVMs;
+S scattered over V rows = VSMs / row-wise product).  The sequence dimension
+is never transposed or gathered — for seq-sharded caches (long_500k) the
+partial-softmax statistics combine across shards via LSE (psum under GSPMD).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.models import layers as L
+
+Params = dict[str, Any]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.attn_type == "mla":
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p = {
+            "wq_a": L.dense_init(ks[0], d, cfg.q_lora_rank, dtype)["w"],
+            "q_norm": L.norm_init(cfg.q_lora_rank),
+            "wq_b": L.dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_head, dtype)["w"],
+            "wkv_a": L.dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype)["w"],
+            "kv_norm": L.norm_init(cfg.kv_lora_rank),
+            "wkv_b": L.dense_init(ks[3], cfg.kv_lora_rank,
+                                  cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype)["w"],
+            "wo": L.dense_init(ks[4], cfg.n_heads * cfg.v_head_dim, d, dtype)["w"],
+        }
+        return p
+    p = {
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * hd, dtype)["w"],
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype)["w"],
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype)["w"],
+        "wo": L.dense_init(ks[3], cfg.n_heads * hd, d, dtype)["w"],
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = L.norm_init(hd)
+        p["k_norm"] = L.norm_init(hd)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full (training / prefill) attention — chunked over KV to bound memory
+# ---------------------------------------------------------------------------
+def _causal_chunk_mask(q_pos, k_pos):
+    return (k_pos[None, :] <= q_pos[:, None])
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    kv_block: int = 1024) -> jax.Array:
+    """Memory-bounded attention: lax.scan over KV blocks with running
+    (max, denom) statistics.  q: [B, Tq, H, Dk]; k: [B, Tk, G, Dk];
+    v: [B, Tk, G, Dv] with G = kv heads (GQA groups computed natively —
+    no head replication is ever materialised).  FLOPs match dense attention.
+    """
+    B, Tq, H, Dk = q.shape
+    G = k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // G
+    Tk = k.shape[1]
+    blk = min(kv_block, Tk)
+    n_blocks = math.ceil(Tk / blk)
+    pad = n_blocks * blk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, blk, G, Dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, blk, G, Dv).transpose(1, 0, 2, 3, 4)
+    q5 = (q.astype(jnp.float32) / math.sqrt(Dk)).reshape(B, Tq, G, rep, Dk)
+    q_pos = jnp.arange(Tq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, bidx = xs
+        k_pos = bidx * blk + jnp.arange(blk)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, kblk.astype(jnp.float32))
+        mask = (_causal_chunk_mask(q_pos, k_pos) if causal
+                else jnp.ones((Tq, blk), bool))
+        valid = (k_pos < Tk)
+        s = jnp.where((mask & valid[None, :])[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, rep, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, rep, Tq), jnp.float32)
+    a0 = jnp.zeros((B, G, rep, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # [B,G,rep,Tq,Dv]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, Dv).astype(q.dtype)
+
+
+def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                backend: str = "dense") -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Training / prefill GQA.  Returns (out, (k, v)) for KV caching."""
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, T, cfg.n_heads, hd)
+    k = L.apply_linear(L._lin(p, "wk"), x, backend).reshape(B, T, cfg.n_kv_heads, hd)
+    v = L.apply_linear(L._lin(p, "wv"), x, backend).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q)
+        k = L.apply_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode attention against the int8 SLC cache (dMVM)
+# ---------------------------------------------------------------------------
+def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
+                          backend: str = "dense",
+                          inter_dtype=jnp.float32) -> jax.Array:
+    """q: [B, 1, H, D] float; cache: [B, S, Hkv, D] int8 (+[B, S, Hkv, 1] f32).
+
+    QK^T as integer VVMs (q quantized per-head), SV as the row-wise product:
+    softmax weights scatter over V rows, never transposing the S axis.
+    GQA groups are computed natively (no cache replication).
+    """
+    if backend in ("fused_int8", "pallas"):
+        from repro.kernels.decode_attn import ops as da_ops
+        return da_ops.decode_attention(q, k_q, k_s, v_q, v_s, length)
+    B, _, H, D = q.shape
+    G = k_q.shape[2]
+    rep = H // G
+    qh = q.reshape(B, H, D)
+    q_q, q_scale = quant.quantize_kv(qh)                 # per-(B,H) int8
+    q_q = q_q.reshape(B, G, rep, D)
+    q_scale = q_scale.reshape(B, G, rep, 1)
+    # int8 operands straight into the dot (MXU s8xs8->s32); casting first
+    # would materialise a 4x copy of the K cache
+    s_int = jnp.einsum("bgrd,bsgd->bgrs", q_q, k_q,
+                       preferred_element_type=jnp.int32)
+    k_sc = k_s[..., 0].transpose(0, 2, 1)[:, :, None, :]   # [B,G,1,S]
+    scores = s_int.astype(jnp.float32) * q_scale * k_sc / math.sqrt(D)
+    S = k_q.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)                  # controller op, fp32
+    vf = (v_q.astype(inter_dtype) * v_s.astype(inter_dtype))   # [B,S,G,D]
+    o = jnp.einsum("bgrs,bsgd->bgrd", w.astype(inter_dtype), vf,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               k_q, k_s, v_q, v_s, backend: str = "dense",
+               inter_dtype=jnp.float32):
+    """One-token decode.  Returns (out, (k_new, v_new)) to append to cache."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, 1, cfg.n_heads, hd)
+    k = L.apply_linear(L._lin(p, "wk"), x, backend).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = L.apply_linear(L._lin(p, "wv"), x, backend).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q)
+        k = L.apply_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        pp = jnp.full((B, 1), pos, jnp.int32)
+        q = L.apply_rope(q, pp, cfg.rope_theta)
+        k = L.apply_rope(k, pp, cfg.rope_theta)
+    # current token's k/v take part via cache append done by the caller;
+    # we attend over cache *including* this position, so fold it in here.
+    kq_new, ks_new = quant.quantize_kv(k)
+    vq_new, vs_new = quant.quantize_kv(v)
+    k_q = jax.lax.dynamic_update_slice(k_q, kq_new, (0, pos, 0, 0))
+    k_s = jax.lax.dynamic_update_slice(k_s, ks_new, (0, pos, 0, 0))
+    v_q = jax.lax.dynamic_update_slice(v_q, vq_new, (0, pos, 0, 0))
+    v_s = jax.lax.dynamic_update_slice(v_s, vs_new, (0, pos, 0, 0))
+    o = decode_attention_int8(q, k_q, k_s, v_q, v_s, pos + 1, backend,
+                              inter_dtype)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, 1, -1), backend)
+    return out, (k_q, k_s, v_q, v_s)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): compressed-latent cache; absorbed decode
+# ---------------------------------------------------------------------------
+def mla_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                backend: str = "dense"):
+    """Training/prefill MLA.  Returns (out, latent) where latent =
+    [B, T, kv_lora + rope] is what the SLC region caches."""
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
+    q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
+    c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    c_kv = L.apply_norm(p["kv_norm"], c_kv)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,T,1,dr]
+    kv = L.apply_linear(L._lin(p, "wkv_b"), c_kv, backend).reshape(B, T, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = flash_attention(qf, k, v)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    return out, latent
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               c_q: jax.Array, c_s: jax.Array, backend: str = "dense",
+               inter_dtype=jnp.float32):
+    """Absorbed MLA decode: attention runs directly in the latent space, so
+    the per-step dMVM touches only [S, kv_lora+rope] int8 — the paper's
+    SLC-cache read, 14x smaller than per-head K/V."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
+    q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pp = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = L.apply_rope(q_rope, pp, cfg.rope_theta)
+
+    kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
+    c_new = L.apply_norm(p["kv_norm"], kv_a[..., :r])
+    k_rope_new = L.apply_rope(kv_a[:, :, None, r:], pp, cfg.rope_theta)[:, :, 0, :]
+    latent_new = jnp.concatenate([c_new, k_rope_new], axis=-1)      # [B,1,r+dr]
+    amax = jnp.max(jnp.abs(latent_new.astype(jnp.float32)), axis=-1, keepdims=True)
+    sc = jnp.maximum(amax, 1e-8) / 127.0
+    lq = jnp.clip(jnp.round(latent_new / sc.astype(latent_new.dtype)),
+                  -127, 127).astype(jnp.int8)
+    c_q = jax.lax.dynamic_update_slice(c_q, lq, (0, pos, 0))
+    c_s = jax.lax.dynamic_update_slice(c_s, sc, (0, pos, 0))
+
+    wkv_b = (p["wkv_b"] if "wkv_b" in p else
+             (p["wkv_b_q"].astype(jnp.float32) * p["wkv_b_s"])).reshape(r, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]                   # [r,H,dn],[r,H,dv]
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(inter_dtype),
+                       w_uk.astype(inter_dtype))                    # absorb W_UK
+    cache = c_q.astype(inter_dtype) * c_s.astype(inter_dtype)       # [B,S,r+dr]
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff, cache[..., :r],
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(inter_dtype),
+                         cache[..., r:], preferred_element_type=jnp.float32))
+    scores = scores / math.sqrt(dn + dr)
+    S = c_q.shape[1]
+    mask = jnp.arange(S)[None, None, :] < (pos + 1)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w.astype(inter_dtype), cache[..., :r],
+                       preferred_element_type=jnp.float32)          # latent-space SV
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32)) # expand W_UV
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, 1, -1).astype(x.dtype),
+                         backend)
+    return out, (c_q, c_s)

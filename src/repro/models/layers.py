@@ -1,0 +1,156 @@
+"""Shared neural building blocks (pure JAX, pytree params).
+
+Every linear layer is a dict ``{"w": [in, out]}`` (bf16/f32 training path) or
+its quantized "QLC-region" form ``{"w_q", "w_s", ("smooth")}`` produced by
+:func:`repro.core.quant.make_quantized_linear`.  ``apply_linear`` dispatches
+on the param form and the execution backend, so the same model code runs the
+bf16 training path, the W8A8 reference path, or the Pallas PIM kernels.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w}
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"w": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# linear dispatch (dense | quantized-ref | pallas kernels)
+# ---------------------------------------------------------------------------
+def apply_linear(p: Params, x: jax.Array, backend: str = "dense") -> jax.Array:
+    """x: [..., in] -> [..., out]."""
+    if "w_q" in p:
+        lin = quant.QuantizedLinear(w_q=p["w_q"], w_scale=p["w_s"],
+                                    smooth=p.get("smooth"))
+        if lin.smooth is not None:
+            x = x * (1.0 / lin.smooth)
+        x_q, x_s = quant.quantize_activation(x)
+        if backend == "pim_bitserial":
+            from repro.kernels.pim_mvm import ops as pim_ops
+            return pim_ops.pim_mvm(x_q, x_s, lin, out_dtype=x.dtype)
+        if backend == "fused_int8":
+            from repro.kernels.int8_matmul import ops as mm_ops
+            return mm_ops.int8_matmul(x_q, x_s, lin, out_dtype=x.dtype)
+        return quant.int8_matmul_ref(x_q, x_s, lin, out_dtype=x.dtype)
+    return jnp.einsum("...i,io->...o", x, p["w"].astype(x.dtype))
+
+
+def quantize_linear_params(p: Params, act_amax: jax.Array | None = None) -> Params:
+    lin = quant.make_quantized_linear(p["w"].astype(jnp.float32), act_amax)
+    out = {"w_q": lin.w_q, "w_s": lin.w_scale}
+    if lin.smooth is not None:
+        out["smooth"] = lin.smooth
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_init(d: int, norm_type: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Controller op (fp32 'ARM-core' path): always computed in fp32."""
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, D]; positions: [B, T] (or [T])."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLPs: swiglu | gelu | relu2 (squared ReLU, Nemotron-4)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, ff: int, mlp_type: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, ff, dtype)["w"],
+         "w_down": dense_init(ks[1], ff, d, dtype)["w"]}
+    if mlp_type == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, ff, dtype)["w"]
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, mlp_type: str, backend: str = "dense") -> jax.Array:
+    up = apply_linear(_lin(p, "w_up"), x, backend)
+    if mlp_type == "swiglu":
+        gate = apply_linear(_lin(p, "w_gate"), x, backend)
+        h = jax.nn.silu(gate) * up
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return apply_linear(_lin(p, "w_down"), h, backend)
+
+
+def _lin(p: Params, name: str) -> Params:
+    """Fetch sub-linear ``name`` whether dense or quantized."""
+    if name + "_q" in p:
+        out = {"w_q": p[name + "_q"], "w_s": p[name + "_s"]}
+        if name + "_smooth" in p:
+            out["smooth"] = p[name + "_smooth"]
+        return out
+    return {"w": p[name]}
+
+
+def quantize_named(p: Params, names: list[str]) -> Params:
+    """Replace the listed [in,out] weights with their W8A8 'QLC' form."""
+    out = dict(p)
+    for n in names:
+        if n not in p:
+            continue
+        q = quantize_linear_params({"w": p[n]})
+        del out[n]
+        out[n + "_q"], out[n + "_s"] = q["w_q"], q["w_s"]
+    return out

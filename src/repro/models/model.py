@@ -1,0 +1,106 @@
+"""Model facade: family dispatch + input specs + FLOPs accounting."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import encdec
+from repro.models import transformer as T
+from repro.models.transformer import Runtime
+
+Params = dict[str, Any]
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg, dtype)
+    return T.init_params(key, cfg, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree — no allocation (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+def param_bytes(cfg: ModelConfig, bytes_per_param: int = 2) -> int:
+    return cfg.param_count() * bytes_per_param
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for (arch x shape): tokens/labels for train, prompt for
+    prefill, (token, cache-position implied by state) for decode.  The
+    modality frontends ([audio]/[vlm]) are stubs: precomputed embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.family == "encdec":
+        frames = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                    "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        return {"token": jax.ShapeDtypeStruct((B,), tok)}
+    if cfg.input_mode == "embeddings":
+        inp = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inp = jax.ShapeDtypeStruct((B, S), tok)
+    if shape.kind == "train":
+        return {"inputs": inp, "labels": jax.ShapeDtypeStruct((B, S), tok)}
+    if shape.kind == "prefill":
+        return {"inputs": inp}
+    return {"token": jax.ShapeDtypeStruct((B,), tok)}
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (Sec. Roofline conventions, DESIGN.md Sec. 8)
+# ---------------------------------------------------------------------------
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence against a seq_len cache
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# unified apply entry points
+# ---------------------------------------------------------------------------
+def train_loss(params, cfg: ModelConfig, batch: dict, rt: Runtime):
+    if cfg.family == "encdec":
+        return encdec.lm_loss(params, cfg, batch["frames"], batch["tokens"],
+                              batch["labels"], rt)
+    return T.lm_loss(params, cfg, batch["inputs"], batch["labels"], rt)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int, rt: Runtime):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
+                              max_len, rt)
+    return T.prefill(params, cfg, batch["inputs"], max_len, rt)
+
+
+def decode_step(params, cfg: ModelConfig, state: dict, token, rt: Runtime):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, state, token, rt)
+    return T.decode_step(params, cfg, state, token, rt)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return encdec.init_decode_state(cfg, batch, max_len)
+    return T.init_decode_state(cfg, batch, max_len)

@@ -1,0 +1,215 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic kernel
++ inter-chunk recurrent state scan); decode is the O(1) recurrence.  The
+constant-size recurrent state is the SSM analog of the paper's SLC region:
+small, frequently rewritten, never grows with context (DESIGN.md Sec. 4).
+
+Projections are stored *split* (w_z, w_x, w_B, w_C, w_dt rather than one
+fused in_proj) so tensor parallelism shards along head-aligned boundaries:
+z/x/dt/A/D shard with the heads over the ``model`` axis while the tiny
+group-shared B/C projections stay replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    G, S, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": L.dense_init(ks[0], d, di, dtype)["w"],
+        "w_x": L.dense_init(ks[1], d, di, dtype)["w"],
+        "w_B": L.dense_init(ks[2], d, G * S, dtype)["w"],
+        "w_C": L.dense_init(ks[3], d, G * S, dtype)["w"],
+        "w_dt": L.dense_init(ks[4], d, H, dtype)["w"],
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, di), dtype) * 0.2,
+        "conv_B": jax.random.normal(ks[6], (cfg.ssm_conv, G * S), dtype) * 0.2,
+        "conv_C": jax.random.normal(ks[7], (cfg.ssm_conv, G * S), dtype) * 0.2,
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((G * S,), dtype),
+        "conv_bC": jnp.zeros((G * S,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.norm_init(di),
+        "out_proj": L.dense_init(ks[4], di, d, dtype)["w"],
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: [B, T, C]; w: [K, C]."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        shift = K - 1 - j
+        xj = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xj * w[j]
+    return out + b
+
+
+def _group_to_heads(t: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[..., G, S] -> [..., H, S]."""
+    rep = cfg.ssm_heads // cfg.ssm_groups
+    return jnp.repeat(t, rep, axis=-2) if rep > 1 else t
+
+
+def _projections(p: Params, cfg: ModelConfig, x: jax.Array, backend: str):
+    z = L.apply_linear(L._lin(p, "w_z"), x, backend)
+    xs = L.apply_linear(L._lin(p, "w_x"), x, backend)
+    Bp = L.apply_linear(L._lin(p, "w_B"), x, backend)
+    Cp = L.apply_linear(L._lin(p, "w_C"), x, backend)
+    dt = L.apply_linear(L._lin(p, "w_dt"), x, backend)
+    return z, xs, Bp, Cp, dt
+
+
+def ssm_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                chunk: int = 128, backend: str = "dense",
+                initial_state=None, return_state: bool = False,
+                use_kernel: bool = False):
+    """x: [B, T, d] -> [B, T, d] (chunked SSD).
+
+    ``use_kernel=True`` routes the intra-chunk quadratic core through the
+    fused Pallas kernel (repro.kernels.ssm_scan); the pure-jnp path below is
+    its oracle (tests/test_kernels_ssm.py asserts equivalence)."""
+    B, T, _ = x.shape
+    di, G, S, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    z, xs_pre, B_pre, C_pre, dt = _projections(p, cfg, x, backend)
+    xs_c1 = jax.nn.silu(_causal_conv(xs_pre, p["conv_x"].astype(x.dtype),
+                                     p["conv_bx"].astype(x.dtype)))
+    B_c = jax.nn.silu(_causal_conv(B_pre, p["conv_B"].astype(x.dtype),
+                                   p["conv_bB"].astype(x.dtype)))
+    C_c = jax.nn.silu(_causal_conv(C_pre, p["conv_C"].astype(x.dtype),
+                                   p["conv_bC"].astype(x.dtype)))
+    xs = xs_c1.reshape(B, T, H, hd)
+    Bm = B_c.reshape(B, T, G, S)
+    Cm = C_c.reshape(B, T, G, S)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])            # [B,T,H]
+    A = -jnp.exp(p["A_log"])                                               # [H]
+
+    if use_kernel:
+        from repro.kernels.ssm_scan.ops import ssd_forward as _ssd_kernel
+        Bh = _group_to_heads(Bm.reshape(B, T, G, S), cfg).astype(jnp.float32)
+        Ch = _group_to_heads(Cm.reshape(B, T, G, S), cfg).astype(jnp.float32)
+        y4, h_last = _ssd_kernel(xs.astype(jnp.float32), Bh, Ch, dt, A,
+                                 p["D"], chunk=chunk, h0=initial_state)
+        y = y4.reshape(B, T, di)
+        y = L.apply_norm(p["norm"],
+                         y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+        out = L.apply_linear(L._lin(p, "out_proj"), y.astype(x.dtype), backend)
+        if return_state:
+            return out, {"conv_x": _tail(xs_pre, cfg), "conv_B": _tail(B_pre, cfg),
+                         "conv_C": _tail(C_pre, cfg), "h": h_last}
+        return out
+
+    Q = min(chunk, T)
+    nc = math.ceil(T / Q)
+    pad = nc * Q - T
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xs_c = xs.reshape(B, nc, Q, H, hd).astype(jnp.float32)
+    Bc = _group_to_heads(Bm.reshape(B, nc, Q, G, S), cfg).astype(jnp.float32)
+    Cc = _group_to_heads(Cm.reshape(B, nc, Q, G, S), cfg).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+
+    la = dtc * A                                                           # [B,nc,Q,H]
+    cs = jnp.cumsum(la, axis=2)
+    xdt = xs_c * dtc[..., None]
+    # intra-chunk (quadratic within the chunk)
+    Ldec = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])            # [B,nc,Q,K,H]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(tril[None, None, :, :, None], Ldec, 0.0)
+    scores = jnp.einsum("bnqhs,bnkhs->bnqkh", Cc, Bc) * Ldec
+    y_intra = jnp.einsum("bnqkh,bnkhd->bnqhd", scores, xdt)
+    # chunk states
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                             # [B,nc,Q,H]
+    Sn = jnp.einsum("bnkhs,bnkhd->bnhds", Bc * decay_end[..., None], xdt)  # [B,nc,H,hd,S]
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                                 # [B,nc,H]
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, hd, S), jnp.float32))
+
+    def scanf(h, inp):
+        Sn_n, dec_n = inp
+        return dec_n[:, :, None, None] * h + Sn_n, h    # emit state *before* chunk
+
+    h_last, h_prev = jax.lax.scan(
+        scanf, h0, (Sn.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                               # [B,nc,H,hd,S]
+    y_inter = jnp.einsum("bnqhs,bnhds->bnqhd", Cc * jnp.exp(cs)[..., None], h_prev)
+    y = (y_intra + y_inter + p["D"][None, None, None, :, None] * xs_c)
+    y = y.reshape(B, nc * Q, di)[:, :T]
+    y = L.apply_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = L.apply_linear(L._lin(p, "out_proj"), y.astype(x.dtype), backend)
+    if return_state:
+        state = {"conv_x": _tail(xs_pre, cfg), "conv_B": _tail(B_pre, cfg),
+                 "conv_C": _tail(C_pre, cfg), "h": h_last}
+        return out, state
+    return out
+
+
+def _tail(seq: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Last K-1 pre-conv inputs, for decode continuation after prefill."""
+    K = cfg.ssm_conv
+    T = seq.shape[1]
+    tail = seq[:, max(0, T - (K - 1)):]
+    if tail.shape[1] < K - 1:
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+    return tail.astype(jnp.float32)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    K = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, K, cfg.d_inner), jnp.float32),
+        "conv_B": jnp.zeros((batch, K, cfg.ssm_groups * cfg.ssm_state), jnp.float32),
+        "conv_C": jnp.zeros((batch, K, cfg.ssm_groups * cfg.ssm_state), jnp.float32),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                       jnp.float32),
+    }
+
+
+def _conv_step(buf, new, w, b):
+    window = jnp.concatenate([buf, new[:, None].astype(jnp.float32)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(jnp.float32)) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def ssm_decode(p: Params, cfg: ModelConfig, x: jax.Array, state: dict,
+               backend: str = "dense"):
+    """One-step recurrence.  x: [B, 1, d]."""
+    B = x.shape[0]
+    di, G, S, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    z, xs_pre, B_pre, C_pre, dt = _projections(p, cfg, x[:, 0], backend)
+    xh_c, conv_x = _conv_step(state["conv_x"], xs_pre, p["conv_x"], p["conv_bx"])
+    Bm_c, conv_B = _conv_step(state["conv_B"], B_pre, p["conv_B"], p["conv_bB"])
+    Cm_c, conv_C = _conv_step(state["conv_C"], C_pre, p["conv_C"], p["conv_bC"])
+    xh = xh_c.reshape(B, H, hd)
+    Bm = _group_to_heads(Bm_c.reshape(B, G, S), cfg)
+    Cm = _group_to_heads(Cm_c.reshape(B, G, S), cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])            # [B,H]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                                 # [B,H]
+    xdt = xh * dt[..., None]
+    h_new = a[:, :, None, None] * state["h"] + jnp.einsum("bhd,bhs->bhds", xdt, Bm)
+    y = jnp.einsum("bhds,bhs->bhd", h_new, Cm) + p["D"][None, :, None] * xh
+    y = y.reshape(B, di)
+    y = L.apply_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = L.apply_linear(L._lin(p, "out_proj"), y.astype(x.dtype), backend)
+    return out[:, None], {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                          "h": h_new}

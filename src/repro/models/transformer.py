@@ -1,0 +1,508 @@
+"""Decoder-LM assembly for every assigned family (dense/MoE/SSM/hybrid/VLM).
+
+Layers are stacked and scanned for compile-time compactness.  Heterogeneous
+stacks (Jamba's 7:1 Mamba:attention interleave with alternating MoE) scan
+over *periods*: the smallest repeating structural unit, with the slots inside
+a period unrolled.  DeepSeek's dense prefix + MoE tail is two groups.
+
+The decode path is the paper's technique: every static linear can run W8A8
+("QLC region"), attention runs against the int8 "SLC" cache, and norms,
+softmax, and routing are fp32 "controller ops".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution context threaded through model apply functions."""
+    backend: str = "dense"               # dense | ref_int8 | fused_int8 | pim_bitserial
+    mesh: Any = None                     # jax.sharding.Mesh | None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    remat: bool = False
+    collective: str = "psum"             # psum (ring) | htree (tree all-reduce)
+    serve_resident_moe: bool = False     # decode: experts resident (no FSDP gather)
+    dmvm_dtype: Any = None               # e.g. jnp.bfloat16 for SLC intermediates
+    seq_shard: bool = False              # sequence-parallel activations (train)
+
+
+def tree_stack(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# layer structure
+# ---------------------------------------------------------------------------
+def structure_key(cfg: ModelConfig, i: int) -> tuple:
+    return (cfg.layer_kind(i), cfg.is_moe_layer(i))
+
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[int, int, int]]:
+    """[(start, count, period)] covering all decoder layers."""
+    n = cfg.n_layers
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        assert n % p == 0
+        return [(0, n, p)]
+    if cfg.first_dense_layers:
+        f = cfg.first_dense_layers
+        return [(0, f, 1), (f, n - f, 1)]
+    return [(0, n, 1)]
+
+
+def init_layer(key, cfg: ModelConfig, i: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    kind = cfg.layer_kind(i)
+    p: Params = {"ln1": L.norm_init(cfg.d_model, cfg.norm_type)}
+    if kind == "ssm":
+        p["ssm"] = S.ssm_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = A.attn_init(ks[0], cfg, dtype)
+    if cfg.is_moe_layer(i):
+        p["ln2"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _moe_block(p: Params, x: jax.Array, cfg: ModelConfig, rt: Runtime):
+    if rt.mesh is None:
+        return M.moe_apply(p, x, cfg, axis_name=None)
+
+    from repro.dist import collectives as C
+    from repro.dist import sharding as SH
+    ms = SH.moe_param_specs(cfg, rt.mesh, serve=rt.serve_resident_moe)
+    dp = SH.data_axes(rt.mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= rt.mesh.shape[a]
+    # resident layouts replicate tokens inside the block — decode-only
+    # (T==1); prefill/train keep batch-sharded activations + FSDP gathers
+    resident = ms["strategy"] in ("ep2", "ep_data", "etp2") and x.shape[1] == 1
+    if not resident and rt.serve_resident_moe:
+        ms = SH.moe_param_specs(cfg, rt.mesh, serve=False)
+    if resident:
+        # tokens replicated inside the block; experts never move (the paper's
+        # store-and-compute rule: decode weights are flash-resident)
+        x_spec = P(None, None, None)
+    else:
+        b_entry = dp if (x.shape[0] % dp_total == 0 and x.shape[0] >= dp_total) else None
+        x_spec = P(b_entry, None, None)
+
+    def spec_for(nm, leaf):
+        key = nm[:-2] if nm.endswith("_q") else nm
+        if nm in ms["spec"]:
+            return ms["spec"][nm]
+        if key in ms["spec"]:
+            return ms["spec"][key]
+        return P(*([None] * leaf.ndim))
+
+    pspec = {}
+    for nm, leaf in p.items():
+        if nm == "shared":
+            pspec[nm] = {k: ms["shared"].get(k, P(*([None] * leaf[k].ndim)))
+                         for k in leaf}
+        else:
+            pspec[nm] = spec_for(nm, leaf)
+
+    if resident:
+        ep_axes = ms["ep_axes"]
+
+        def f(pp, xx):
+            B, T, d = xx.shape
+            xf = xx.reshape(B * T, d)
+            if ms["strategy"] == "etp2":
+                # all experts local, FFN sliced over every axis
+                e_first, n_local = 0, cfg.n_experts
+            else:
+                size = 1
+                idx = jnp.zeros((), jnp.int32)
+                for a in ep_axes:
+                    idx = idx * rt.mesh.shape[a] + jax.lax.axis_index(a)
+                    size *= rt.mesh.shape[a]
+                n_local = cfg.n_experts // size
+                e_first = idx * n_local
+            # shared experts are ff-sliced over model but replicated over the
+            # data axes, which the combine psums over -> pre-scale
+            out, aux = M.moe_local(pp, xf, cfg, e_first=e_first,
+                                   n_local=n_local,
+                                   shared_scale=1.0 / dp_total)
+            axes = tuple(ep_axes) + ((rt.model_axis,) if ms["strategy"] == "ep_data"
+                                     else ())
+            if rt.collective == "htree":
+                for a in axes:          # log-depth tree reduce per axis
+                    out = C.htree_allreduce(out, a)
+            else:
+                out = jax.lax.psum(out, axes)
+            aux = jax.lax.pmean(aux, tuple(rt.mesh.axis_names))
+            return out.reshape(B, T, d).astype(xx.dtype), aux
+    else:
+        def f(pp, xx):
+            # FSDP: expert weights store data-sharded; gather the FSDP dim here
+            # (transient, one layer at a time under the scan — the ZeRO-3 pattern)
+            pp = dict(pp)
+            if dp:
+                for nm in list(pp):
+                    key = nm[:-2] if nm.endswith("_q") else nm
+                    ax_g = ms["gather"].get(nm, ms["gather"].get(key))
+                    if nm != "shared" and ax_g is not None:
+                        pp[nm] = jax.lax.all_gather(pp[nm], dp, axis=ax_g,
+                                                    tiled=True)
+            out, aux = M.moe_apply(pp, xx, cfg, axis_name=rt.model_axis,
+                                   reduce_fn=lambda o: C.allreduce(
+                                       o, rt.model_axis, rt.collective))
+            aux = jax.lax.pmean(aux, tuple(rt.mesh.axis_names))
+            return out, aux
+
+    out, aux = _shard_map(f, rt.mesh, (pspec, x_spec), (x_spec, P()))(p, x)
+    return out, aux
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    try:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # older API name
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+def apply_layer_train(p: Params, cfg: ModelConfig, slot: int, x, positions,
+                      rt: Runtime):
+    kind = cfg.layer_kind(slot)
+    h = L.apply_norm(p["ln1"], x)
+    if kind == "ssm":
+        mix = S.ssm_forward(p["ssm"], cfg, h, backend=rt.backend)
+    elif cfg.attn_type == "mla":
+        mix, _ = A.mla_forward(p["attn"], cfg, h, positions, rt.backend)
+    else:
+        mix, _ = A.gqa_forward(p["attn"], cfg, h, positions, rt.backend)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h2 = L.apply_norm(p["ln2"], x)
+        mo, aux = _moe_block(p["moe"], h2, cfg, rt)
+        x = x + mo
+    elif "mlp" in p:
+        h2 = L.apply_norm(p["ln2"], x)
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.mlp_type, rt.backend)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model params
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8 + len(layer_groups(cfg)))
+    p: Params = {"embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+                 "ln_f": L.norm_init(cfg.d_model, cfg.norm_type)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab_size, dtype)
+    groups = []
+    for gi, (start, count, period) in enumerate(layer_groups(cfg)):
+        gkeys = jax.random.split(ks[2 + gi], count)
+        n_p = count // period
+        slots = []
+        for s in range(period):
+            slots.append(tree_stack(
+                [init_layer(gkeys[pi * period + s], cfg, start + pi * period + s, dtype)
+                 for pi in range(n_p)]))
+        groups.append(tuple(slots))
+    p["groups"] = tuple(groups)
+    if cfg.mtp:
+        p["mtp_proj"] = L.dense_init(ks[6], 2 * cfg.d_model, cfg.d_model, dtype)
+        p["mtp_layer"] = init_layer(ks[7], cfg, cfg.n_layers - 1, dtype)
+    return p
+
+
+def _embed(p: Params, cfg: ModelConfig, inputs: jax.Array, pos_offset=0) -> jax.Array:
+    if cfg.input_mode == "embeddings" and inputs.ndim == 3:
+        x = inputs
+    else:
+        x = p["embed"]["w"][inputs]
+    if not cfg.rope_theta:                               # sinusoidal positions
+        pe = L.sinusoidal_positions(x.shape[1], cfg.d_model, pos_offset)
+        x = x + pe.astype(x.dtype)
+    return x
+
+
+def _lm_head(p: Params, cfg: ModelConfig, h: jax.Array, rt: Runtime) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, p["embed"]["w"].astype(h.dtype))
+    return L.apply_linear(L._lin(p["lm_head"], "w"), h, rt.backend)
+
+
+def forward_train(p: Params, cfg: ModelConfig, inputs: jax.Array,
+                  rt: Runtime) -> tuple[jax.Array, jax.Array]:
+    """inputs: [B, T] int tokens (or [B, T, d] embeddings).
+    Returns (hidden [B, T, d], aux_loss)."""
+    x = _embed(p, cfg, inputs)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    aux_total = jnp.zeros((), jnp.float32)
+    for (start, count, period), slots in zip(layer_groups(cfg), p["groups"]):
+        def body(carry, slot_trees):
+            xx, aux = carry
+            for s in range(period):
+                xx, a = apply_layer_train(slot_trees[s], cfg, start + s, xx,
+                                          positions, rt)
+                aux = aux + a
+            if rt.seq_shard and rt.mesh is not None:
+                # Megatron-style sequence parallelism: residuals/norms live
+                # sequence-sharded over the model axis between layers
+                from jax.sharding import NamedSharding
+                xx = jax.lax.with_sharding_constraint(
+                    xx, NamedSharding(rt.mesh,
+                                      P(rt.data_axes, rt.model_axis, None)))
+            return (xx, aux), None
+        body_fn = jax.checkpoint(body) if rt.remat else body
+        (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total), slots)
+    x = L.apply_norm(p["ln_f"], x)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Nested cache pytree mirroring the group/slot structure."""
+    groups = []
+    for (start, count, period) in layer_groups(cfg):
+        n_p = count // period
+        slots = []
+        for s in range(period):
+            kind = cfg.layer_kind(start + s)
+            if kind == "ssm":
+                st = S.init_ssm_state(cfg, batch)
+                slots.append(jax.tree.map(
+                    lambda a: jnp.zeros((n_p, *a.shape), a.dtype), st))
+            elif cfg.attn_type == "mla":
+                dim = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+                slots.append({
+                    "c_q": jnp.zeros((n_p, batch, max_len, dim), jnp.int8),
+                    "c_s": jnp.zeros((n_p, batch, max_len, 1), jnp.float32)})
+            else:
+                kv = (n_p, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+                sc = (n_p, batch, max_len, cfg.n_kv_heads, 1)
+                slots.append({
+                    "k_q": jnp.zeros(kv, jnp.int8), "k_s": jnp.zeros(sc, jnp.float32),
+                    "v_q": jnp.zeros(kv, jnp.int8), "v_s": jnp.zeros(sc, jnp.float32)})
+        groups.append(tuple(slots))
+    return {"groups": tuple(groups), "pos": jnp.zeros((), jnp.int32)}
+
+
+def apply_layer_decode(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
+                       rt: Runtime):
+    kind = cfg.layer_kind(slot)
+    dmvm_dt = rt.dmvm_dtype or jnp.float32
+    h = L.apply_norm(p["ln1"], x)
+    if kind == "ssm":
+        mix, new_cache = S.ssm_decode(p["ssm"], cfg, h, cache, rt.backend)
+    elif cfg.attn_type == "mla":
+        mix, (c_q, c_s) = A.mla_decode(p["attn"], cfg, h, pos, cache["c_q"],
+                                       cache["c_s"], rt.backend, dmvm_dt)
+        new_cache = {"c_q": c_q, "c_s": c_s}
+    else:
+        mix, (k_q, k_s, v_q, v_s) = A.gqa_decode(
+            p["attn"], cfg, h, pos, cache["k_q"], cache["k_s"], cache["v_q"],
+            cache["v_s"], rt.backend, dmvm_dt)
+        new_cache = {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}
+    x = x + mix
+    if "moe" in p:
+        mo, _ = _moe_block(p["moe"], L.apply_norm(p["ln2"], x), cfg, rt)
+        x = x + mo
+    elif "mlp" in p:
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x), cfg.mlp_type,
+                            rt.backend)
+    return x, new_cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, state: dict, token: jax.Array,
+                rt: Runtime) -> tuple[jax.Array, dict]:
+    """token: [B] (or [B, d] embedding) -> (logits [B, V], new state)."""
+    pos = state["pos"]
+    if cfg.input_mode == "embeddings" and token.ndim == 2:
+        x = token[:, None, :]
+    else:
+        x = p["embed"]["w"][token][:, None]
+    if not cfg.rope_theta:
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+    new_groups = []
+    for (start, count, period), slots, caches in zip(
+            layer_groups(cfg), p["groups"], state["groups"]):
+        n_p = jax.tree.leaves(slots[0])[0].shape[0]
+
+        def body(carry, xs):
+            xx, full_caches = carry
+            slot_trees, idx = xs
+            new_full = []
+            for s in range(period):
+                # slice this period's cache from the carried buffer and
+                # write the update back in place (dynamic_update_slice on
+                # the loop carry -> no full-cache copy per layer)
+                cache_s = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                           keepdims=False),
+                    full_caches[s])
+                xx, nc = apply_layer_decode(slot_trees[s], cfg, start + s, xx,
+                                            pos, cache_s, rt)
+                new_full.append(jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                        full, new[None].astype(full.dtype), idx, 0),
+                    full_caches[s], nc))
+            return (xx, tuple(new_full)), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            body, (x, caches), (slots, jnp.arange(n_p)))
+        new_groups.append(new_caches)
+    x = L.apply_norm(p["ln_f"], x)
+    logits = _lm_head(p, cfg, x[:, 0], rt)
+    return logits, {"groups": tuple(new_groups), "pos": pos + 1}
+
+
+def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    """Single-position sinusoidal embedding (no table materialisation)."""
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    return pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+
+
+# ---------------------------------------------------------------------------
+# prefill: run the train forward but also build the decode cache
+# ---------------------------------------------------------------------------
+def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
+            rt: Runtime) -> tuple[jax.Array, dict]:
+    """Process a prompt of length T; return (last-token logits, decode state).
+
+    The prefill pass is the "GPU stage" of the paper's pipeline: full-width
+    bf16 compute, after which K/V are quantized into the int8 SLC cache.
+    """
+    x = _embed(p, cfg, inputs)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    state = init_decode_state(cfg, B, max_len)
+    new_groups = []
+    for (start, count, period), slots, caches in zip(
+            layer_groups(cfg), p["groups"], state["groups"]):
+        def body(xx, xs):
+            slot_trees, slot_caches = xs
+            new_c = []
+            for s in range(period):
+                slot = start + s
+                kind = cfg.layer_kind(slot)
+                pp = slot_trees[s]
+                h = L.apply_norm(pp["ln1"], xx)
+                if kind == "ssm":
+                    mix, nc = S.ssm_forward(pp["ssm"], cfg, h,
+                                            backend=rt.backend,
+                                            return_state=True)
+                elif cfg.attn_type == "mla":
+                    mix, latent = A.mla_forward(pp["attn"], cfg, h, positions,
+                                                rt.backend)
+                    amax = jnp.max(jnp.abs(latent), -1, keepdims=True)
+                    sc = jnp.maximum(amax, 1e-8) / 127.0
+                    lq = jnp.clip(jnp.round(latent / sc), -127, 127).astype(jnp.int8)
+                    c = slot_caches[s]
+                    nc = {"c_q": jax.lax.dynamic_update_slice(
+                              c["c_q"], lq, (0, 0, 0)),
+                          "c_s": jax.lax.dynamic_update_slice(
+                              c["c_s"], sc.astype(jnp.float32), (0, 0, 0))}
+                else:
+                    mix, (k, v) = A.gqa_forward(pp["attn"], cfg, h, positions,
+                                                rt.backend)
+                    from repro.core.quant import quantize_kv
+                    # land k/v on the cache's sharding *before* quantizing so
+                    # the quantize+update pipeline doesn't bounce layouts
+                    # (SPMD otherwise falls back to full rematerialisation)
+                    if rt.mesh is not None:
+                        from jax.sharding import NamedSharding
+                        kv_spec = P(rt.data_axes, rt.model_axis, None, None)
+                        k = jax.lax.with_sharding_constraint(
+                            k, NamedSharding(rt.mesh, kv_spec))
+                        v = jax.lax.with_sharding_constraint(
+                            v, NamedSharding(rt.mesh, kv_spec))
+                    k_q, k_s = quantize_kv(k)
+                    v_q, v_s = quantize_kv(v)
+                    c = slot_caches[s]
+                    nc = {"k_q": jax.lax.dynamic_update_slice(c["k_q"], k_q, (0, 0, 0, 0)),
+                          "k_s": jax.lax.dynamic_update_slice(c["k_s"], k_s, (0, 0, 0, 0)),
+                          "v_q": jax.lax.dynamic_update_slice(c["v_q"], v_q, (0, 0, 0, 0)),
+                          "v_s": jax.lax.dynamic_update_slice(c["v_s"], v_s, (0, 0, 0, 0))}
+                xx = xx + mix
+                if "moe" in pp:
+                    mo, _ = _moe_block(pp["moe"], L.apply_norm(pp["ln2"], xx), cfg, rt)
+                    xx = xx + mo
+                elif "mlp" in pp:
+                    xx = xx + L.apply_mlp(pp["mlp"], L.apply_norm(pp["ln2"], xx),
+                                          cfg.mlp_type, rt.backend)
+                new_c.append(nc)
+            return xx, tuple(new_c)
+        x, new_caches = jax.lax.scan(body, x, (slots, caches))
+        new_groups.append(new_caches)
+    x = L.apply_norm(p["ln_f"], x)
+    logits = _lm_head(p, cfg, x[:, -1], rt)
+    return logits, {"groups": tuple(new_groups),
+                    "pos": jnp.array(T, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over sequence to bound logits memory)
+# ---------------------------------------------------------------------------
+def lm_loss(p: Params, cfg: ModelConfig, inputs, labels, rt: Runtime,
+            chunk: int = 512) -> jax.Array:
+    h, aux = forward_train(p, cfg, inputs, rt)
+    B, T = h.shape[:2]
+    n_chunks = max(1, T // chunk)
+    if T % n_chunks:
+        n_chunks = 1
+    hc = h.reshape(B, n_chunks, T // n_chunks, -1)
+    lc = labels.reshape(B, n_chunks, T // n_chunks)
+
+    def chunk_loss(carry, xs):
+        hh, ll = xs
+        logits = _lm_head(p, cfg, hh, rt).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            (hc.transpose(1, 0, 2, 3), lc.transpose(1, 0, 2)))
+    loss = total / (B * T)
+    if cfg.mtp:
+        loss = loss + 0.3 * _mtp_loss(p, cfg, h, inputs, labels, rt, chunk)
+    return loss + 0.01 * aux
+
+
+def _mtp_loss(p, cfg, h, inputs, labels, rt, chunk):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2."""
+    emb_next = _embed(p, cfg, inputs)[:, 1:]
+    hcat = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+    hm = L.apply_linear(L._lin(p["mtp_proj"], "w"), hcat, rt.backend)
+    B, Tm = hm.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(Tm), (B, Tm))
+    hm, _ = apply_layer_train(p["mtp_layer"], cfg, cfg.n_layers - 1, hm,
+                              positions, rt)
+    # hm[:, t] (from h_t and emb of token t+1) predicts labels[t+1] = token t+2
+    logits = _lm_head(p, cfg, hm, rt).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, 1:][..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

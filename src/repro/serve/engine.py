@@ -1,0 +1,63 @@
+"""Serving engine: the paper's offload pipeline as a runnable system.
+
+`prefill` is the "GPU stage" (full-precision summarization); its K/V land
+quantized in the int8 SLC cache; `decode` loops the W8A8 PIM path.  The
+engine batches concurrent requests (left-padding-free: same-length synthetic
+prompts per batch) and tracks per-request state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.transformer import Runtime
+from repro.serve.quantize import quantize_tree
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: ModelConfig
+    params: Any                       # float params (prefill path)
+    rt: Runtime = dataclasses.field(default_factory=Runtime)
+    max_len: int = 256
+    quantize: bool = True
+
+    def __post_init__(self):
+        self.qparams = quantize_tree(self.params) if self.quantize else self.params
+        rt_decode = dataclasses.replace(self.rt)
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, self.cfg, b, self.max_len, self.rt))
+        self._decode = jax.jit(
+            lambda p, s, t: M.decode_step(p, self.cfg, s, t, rt_decode))
+
+    def generate(self, batch: dict, steps: int, greedy: bool = True,
+                 rng: jax.Array | None = None):
+        """Prefill the prompt batch then generate ``steps`` tokens.
+        Returns (tokens [B, steps], per-stage timings)."""
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        # KV handoff complete: decode runs against the quantized weights
+        toks = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        t0 = time.perf_counter()
+        for i in range(steps):
+            toks.append(tok)
+            logits, state = self._decode(self.qparams, state, tok)
+            if greedy or rng is None:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(k, logits).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+        return (jnp.stack(toks, axis=1),
+                {"prefill_s": t_prefill, "decode_s": t_decode,
+                 "tpot_s": t_decode / max(1, steps)})

@@ -1,0 +1,102 @@
+"""Training step: loss -> grads -> AdamW, with remat and microbatch
+gradient accumulation (compute/comm overlap: the per-microbatch backward
+overlaps the previous microbatch's gradient reduce under XLA scheduling)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.transformer import Runtime
+from repro.optim.adamw import AdamW, AdamWState
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, rt: Runtime):
+    return M.train_loss(params, cfg, batch, rt)
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt: AdamW,
+                    microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, cfg, batch, rt)
+
+    def step(params, opt_state: AdamWState, batch: dict):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, xs):
+                loss_acc, g_acc = carry
+                l, g = grads_of(params, xs)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def opt_state_shardings(opt: AdamW, params_abstract, param_sh, mesh):
+    """Moments shard exactly like the params; int8 block scales share the
+    param's spec (same rank — last dim collapsed by BLOCK) or replicate when
+    the per-tensor fallback made them scalars."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m_abs = jax.eval_shape(opt.init, params_abstract).m
+    flat_ps, treedef = jax.tree_util.tree_flatten(param_sh)
+    flat_m = treedef.flatten_up_to(m_abs)
+
+    def _fit_spec(spec, shape):
+        """Drop spec entries whose axes no longer divide the dim (the block
+        scales collapse the last dim by BLOCK)."""
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, e in zip(shape, entries):
+            if e is None:
+                out.append(None)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            out.append(e if (dim % total == 0 and dim >= total) else None)
+        return P(*out)
+
+    def msh(ps, ma):
+        if isinstance(ma, dict):
+            if ma["s"].ndim == 0:
+                s_sh = NamedSharding(mesh, P())
+            else:
+                s_sh = NamedSharding(mesh, _fit_spec(ps.spec, ma["s"].shape))
+            return {"q": ps, "s": s_sh}
+        return ps
+
+    m_sh = treedef.unflatten([msh(ps, ma) for ps, ma in zip(flat_ps, flat_m)])
+    return AdamWState(count=NamedSharding(mesh, P()), m=m_sh, v=m_sh)
+
+
+def jit_train_step(cfg: ModelConfig, rt: Runtime, opt: AdamW, mesh,
+                   params_abstract, param_sh, batch_sh,
+                   microbatches: int = 1):
+    """jit with explicit in/out shardings (opt state follows the params)."""
+    from repro.dist import sharding as SH
+    step = make_train_step(cfg, rt, opt, microbatches)
+    opt_sh = opt_state_shardings(opt, params_abstract, param_sh, mesh)
+    return jax.jit(step,
+                   in_shardings=(param_sh, opt_sh, batch_sh),
+                   out_shardings=(param_sh, opt_sh, SH.replicated(mesh)),
+                   donate_argnums=(0, 1))

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels.pim_mvm import ref as pim_ref, ops as pim_ops
+from repro.kernels.pim_mvm.kernel import pim_mvm_pallas
+from repro.kernels.int8_matmul import ref as mm_ref, ops as mm_ops
+from repro.kernels.decode_attn import ref as da_ref, ops as da_ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_linear(key, k, n, scale=0.3):
+    w = jax.random.normal(key, (k, n)) * scale
+    return quant.make_quantized_linear(w), w
+
+
+class TestPimMvm:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 128, 512), (8, 256, 512), (16, 384, 1024),
+        (3, 100, 130),            # non-aligned -> padding path
+        (32, 1024, 256),
+    ])
+    def test_matches_oracle(self, m, k, n):
+        kx, kw = jax.random.split(jax.random.key(m * k + n))
+        x = jax.random.normal(kx, (m, k))
+        lin, _ = _mk_linear(kw, k, n)
+        x_q, x_s = quant.quantize_activation(x)
+        hi, lo = quant.pack_qlc(lin.w_q)
+        want = pim_ref.ref_int(x_q, hi, lo, x_s, lin.w_scale)
+        got = pim_ops.pim_mvm(x_q, x_s, lin)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_bitserial_oracle_exact_vs_int(self):
+        """Eq. (2)'s bit-serial dataflow is integer-exact."""
+        x = jax.random.randint(jax.random.key(0), (8, 64), -127, 128, jnp.int8)
+        w = jax.random.randint(jax.random.key(1), (64, 32), -127, 128, jnp.int8)
+        hi, lo = quant.pack_qlc(w)
+        s1 = jnp.ones((8, 1)); s2 = jnp.ones((32,))
+        a = pim_ref.ref_int(x, hi, lo, s1, s2)
+        b = pim_ref.ref_bitserial(x, hi, lo, s1, s2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_bit_widths(self, bits):
+        """Eq. (3): latency scales with B_input; math stays exact per width."""
+        x_q = jax.random.randint(jax.random.key(2), (4, 128),
+                                 -(2**(bits-1) - 1), 2**(bits-1), jnp.int8)
+        w = jax.random.randint(jax.random.key(3), (128, 256), -127, 128, jnp.int8)
+        hi, lo = quant.pack_qlc(w)
+        xs = jnp.ones((4, 1)); ws = jnp.ones((256,))
+        got = pim_mvm_pallas(x_q, xs, hi, lo, ws, bits=8)
+        want = pim_ref.ref_int(x_q, hi, lo, xs, ws)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_batched_leading_dims(self):
+        x = jax.random.normal(jax.random.key(4), (2, 3, 256))
+        lin, w = _mk_linear(jax.random.key(5), 256, 512)
+        x_q, x_s = quant.quantize_activation(x)
+        out = pim_ops.pim_mvm(x_q, x_s, lin)
+        assert out.shape == (2, 3, 512)
+        rel = jnp.abs(out - x @ w).max() / jnp.abs(x @ w).max()
+        assert float(rel) < 0.05
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 128, 128), (128, 512, 256), (7, 100, 50), (256, 1024, 640),
+    ])
+    def test_matches_oracle(self, m, k, n):
+        kx, kw = jax.random.split(jax.random.key(m + k + n))
+        x = jax.random.normal(kx, (m, k))
+        lin, _ = _mk_linear(kw, k, n)
+        x_q, x_s = quant.quantize_activation(x)
+        want = mm_ref.ref(x_q, lin.w_q, x_s, lin.w_scale)
+        got = mm_ops.int8_matmul(x_q, x_s, lin)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_fused_equals_bitserial(self):
+        """The optimized kernel computes exactly what the PIM array computes."""
+        x = jax.random.normal(jax.random.key(6), (16, 256))
+        lin, _ = _mk_linear(jax.random.key(7), 256, 512)
+        x_q, x_s = quant.quantize_activation(x)
+        a = mm_ops.int8_matmul(x_q, x_s, lin)
+        b = pim_ops.pim_mvm(x_q, x_s, lin)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestDecodeAttn:
+    @pytest.mark.parametrize("b,s,g,rep,d,length", [
+        (1, 256, 1, 1, 64, 256),
+        (2, 1024, 4, 2, 64, 700),
+        (2, 512, 2, 4, 128, 100),
+        (1, 300, 8, 1, 64, 299),      # non-aligned seq
+    ])
+    def test_matches_oracle(self, b, s, g, rep, d, length):
+        k1, k2, k3 = jax.random.split(jax.random.key(b * s + g + d), 3)
+        q = jax.random.normal(k1, (b, 1, g * rep, d))
+        k = jax.random.normal(k2, (b, s, g, d))
+        v = jax.random.normal(k3, (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        ln = jnp.array(length, jnp.int32)
+        want = da_ref.ref(q, k_q, k_s, v_q, v_s, ln)
+        got = da_ops.decode_attention(q, k_q, k_s, v_q, v_s, ln)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-6)
+
+    def test_length_mask_excludes_tail(self):
+        """Entries past `length` must not affect the output."""
+        b, s, g, d = 1, 128, 2, 64
+        q = jax.random.normal(jax.random.key(0), (b, 1, g, d))
+        k = jax.random.normal(jax.random.key(1), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(2), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        o1 = da_ops.decode_attention(q, k_q, k_s, v_q, v_s, jnp.array(64))
+        # poison the tail
+        k_q2 = k_q.at[:, 64:].set(127)
+        v_q2 = v_q.at[:, 64:].set(-127)
+        o2 = da_ops.decode_attention(q, k_q2, k_s, v_q2, v_s, jnp.array(64))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)

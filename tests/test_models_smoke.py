@@ -1,0 +1,99 @@
+"""Per-arch reduced-config smoke tests: one forward/train step on CPU,
+asserting output shapes and the absence of NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, ASSIGNED
+from repro.configs.shapes import SHAPES, applicable
+from repro.models import model as M
+from repro.models.transformer import Runtime
+
+jax.config.update("jax_platform_name", "cpu")
+RT = Runtime()
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    if cfg.family == "encdec":
+        return {"frames": jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+    if cfg.input_mode == "embeddings":
+        return {"inputs": jax.random.normal(key, (B, T, cfg.d_model)),
+                "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+    return {"inputs": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    key = jax.random.key(0)
+    for name in ASSIGNED:
+        cfg = ARCHS[name].reduced()
+        out[name] = (cfg, M.init_params(key, cfg))
+    return out
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_train_step_finite(models, name):
+    cfg, params = models[name]
+    loss = M.train_loss(params, cfg, _batch(cfg, jax.random.key(1)), RT)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{name} loss not finite"
+    assert 1.0 < float(loss) < 20.0       # ~ln(V) at init
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_decode_shapes(models, name):
+    cfg, params = models[name]
+    batch = _batch(cfg, jax.random.key(2))
+    logits, state = M.prefill(params, cfg, batch, max_len=32, rt=RT)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, state2 = M.decode_step(params, cfg, state, tok, RT)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{name} decode logits NaN"
+    assert int(state2["pos"]) == int(state["pos"]) + 1
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_param_count_matches_analytic(models, name):
+    cfg, params = models[name]
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    analytic = cfg.param_count()
+    assert abs(actual - analytic) / analytic < 0.02, (
+        f"{name}: actual {actual} vs analytic {analytic}")
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_full_config_sanity(name):
+    """Full (non-reduced) configs match the assigned parameter scales."""
+    cfg = ARCHS[name]
+    n = cfg.param_count()
+    expected = {"whisper-tiny": 39e6, "deepseek-v3-671b": 671e9,
+                "grok-1-314b": 314e9, "jamba-1.5-large-398b": 398e9,
+                "nemotron-4-340b": 340e9, "granite-3-8b": 8e9,
+                "llama3-8b": 8e9, "phi3-mini-3.8b": 3.8e9,
+                "mamba2-2.7b": 2.7e9, "chameleon-34b": 34e9}[name]
+    assert 0.7 * expected <= n <= 1.4 * expected, f"{name}: {n/1e9:.1f}B"
+
+
+def test_long_context_applicability():
+    long = SHAPES["long_500k"]
+    runs = {a for a in ASSIGNED if applicable(ARCHS[a], long)[0]}
+    assert runs == {"mamba2-2.7b", "jamba-1.5-large-398b"}
+
+
+def test_layer_structure_jamba():
+    cfg = ARCHS["jamba-1.5-large-398b"]
+    kinds = [cfg.layer_kind(i) for i in range(8)]
+    assert kinds.count("attn") == 1 and kinds[4] == "attn"
+    assert cfg.is_moe_layer(1) and not cfg.is_moe_layer(0)
+
+
+def test_layer_structure_deepseek():
+    cfg = ARCHS["deepseek-v3-671b"]
+    assert not cfg.is_moe_layer(0) and not cfg.is_moe_layer(2)
+    assert cfg.is_moe_layer(3) and cfg.is_moe_layer(60)

@@ -1,0 +1,108 @@
+"""Paper-claim tests for the analytical PIM stack (Secs. III & V)."""
+import math
+
+import pytest
+
+from repro.core.pim import (
+    CONVENTIONAL, SIZE_A, SIZE_B, PlaneConfig, cell_density_gb_per_mm2,
+    die_area_mm2, die_budget_mm2, plane_area, select_plane, t_pim, t_read,
+)
+from repro.core.pim import energy_per_op
+from repro.core import htree
+
+
+class TestPlaneLatency:
+    def test_size_a_pim_latency_2us(self):
+        """Sec. III-B: ~2 us PIM latency at Size A."""
+        assert 1.5e-6 <= t_pim(SIZE_A) <= 2.2e-6
+
+    def test_size_b_faster_than_a(self):
+        assert t_pim(SIZE_B) < t_pim(SIZE_A)
+
+    def test_conventional_read_20_50us(self):
+        """Sec. III-A: conventional planes read in 20-50 us."""
+        assert 20e-6 <= t_read(CONVENTIONAL) <= 50e-6
+
+    def test_latency_monotone_in_each_dim(self):
+        base = dict(n_row=256, n_col=1024, n_stack=128)
+        for dim, vals in [("n_row", (256, 1024, 4096)),
+                          ("n_col", (1024, 4096, 16384)),
+                          ("n_stack", (32, 64, 128))]:
+            ts = [t_pim(PlaneConfig(**{**base, dim: v})) for v in vals]
+            assert ts == sorted(ts), f"t_pim not monotone in {dim}"
+
+    def test_tpre_superlinear_in_rows(self):
+        """Fig. 6a: t_pre rises sharply with N_row (tau_BL ~ N_row^2)."""
+        from repro.core.pim.latency import components
+        t1 = components(PlaneConfig(1024, 1024, 128)).t_pre
+        t2 = components(PlaneConfig(4096, 1024, 128)).t_pre
+        assert t2 / t1 > 4 * 1.5  # superlinear vs 4x rows
+
+
+class TestDensityArea:
+    def test_size_a_density(self):
+        """Fig. 6c: 12.84 Gb/mm^2 at Size A."""
+        assert cell_density_gb_per_mm2(SIZE_A) == pytest.approx(12.84, rel=0.01)
+
+    def test_size_b_half_density(self):
+        """Fig. 9b: Size A has 2x the density of Size B."""
+        ratio = cell_density_gb_per_mm2(SIZE_A) / cell_density_gb_per_mm2(SIZE_B)
+        assert ratio == pytest.approx(2.0, rel=0.01)
+
+    def test_density_independent_of_rows(self):
+        """Eq. (4): W ~ N_row cancels."""
+        d1 = cell_density_gb_per_mm2(PlaneConfig(128, 2048, 128))
+        d2 = cell_density_gb_per_mm2(PlaneConfig(1024, 2048, 128))
+        assert d1 == pytest.approx(d2, rel=1e-9)
+
+    def test_die_area_498mm2(self):
+        """Sec. V-C: 256 Size-A planes = 4.98 mm^2."""
+        assert die_area_mm2(SIZE_A) == pytest.approx(4.98, rel=0.005)
+
+    def test_fits_packaging_budget(self):
+        lo, hi = die_budget_mm2()
+        assert 5.0 <= lo <= 6.0 and 7.0 <= hi <= 8.0  # paper: 5.6-7.5
+        assert die_area_mm2(SIZE_A) <= lo
+
+    def test_table2_ratios(self):
+        """Table II: HV 21.62 %, LV 23.16 %, RPU+H-tree 0.39 % of plane."""
+        ab = plane_area(SIZE_A)
+        assert ab.ratio(ab.hv_peri_mm2) == pytest.approx(0.2162, abs=0.005)
+        assert ab.ratio(ab.lv_peri_mm2) == pytest.approx(0.2316, abs=0.005)
+        assert ab.ratio(ab.rpu_htree_mm2) == pytest.approx(0.0039, abs=0.001)
+        assert ab.fits_under_array
+
+
+class TestDse:
+    def test_selects_size_a(self):
+        """Sec. III-B: DSE picks 256 x 2048 x 128."""
+        sel = select_plane()
+        assert (sel.cfg.n_row, sel.cfg.n_col, sel.cfg.n_stack) == (256, 2048, 128)
+
+    def test_denser_config_violates_latency(self):
+        """The 4096-col config would be denser but breaks the 2us target."""
+        big = PlaneConfig(256, 4096, 128)
+        assert cell_density_gb_per_mm2(big) > cell_density_gb_per_mm2(SIZE_A)
+        assert t_pim(big) > 1.9e-6
+
+    def test_energy_scale_nj(self):
+        e = energy_per_op(SIZE_A).total
+        assert 1e-9 < e < 100e-9
+
+
+class TestHtree:
+    def test_fig9a_mean_reduction(self):
+        """Fig. 9a: ~46 % mean execution-time reduction with the H-tree."""
+        reds = [1 - ht.total / sh.total for _, sh, ht in htree.fig9a_cases()]
+        mean = sum(reds) / len(reds)
+        assert 0.35 <= mean <= 0.60
+
+    def test_fig9b_size_a_overhead(self):
+        """Fig. 9b: Size A costs ~+17 % time for 2x density (iso-throughput)."""
+        ratios = [a.total / b.total for _, a, b in htree.fig9b_cases()]
+        mean = sum(ratios) / len(ratios)
+        assert 1.05 <= mean <= 1.30
+
+    def test_htree_always_at_least_as_fast(self):
+        for _, sh, ht in htree.fig9a_cases():
+            assert ht.total <= sh.total

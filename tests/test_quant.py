@@ -1,0 +1,68 @@
+"""Quantization invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestPacking:
+    def test_qlc_roundtrip_all_values(self):
+        w = jnp.arange(-128, 128, dtype=jnp.int8).reshape(16, 16)
+        hi, lo = quant.pack_qlc(w)
+        assert int(hi.min()) >= -8 and int(hi.max()) <= 7
+        assert int(lo.min()) >= 0 and int(lo.max()) <= 15
+        np.testing.assert_array_equal(np.asarray(quant.unpack_qlc(hi, lo)),
+                                      np.asarray(w))
+
+    def test_bitplanes_reconstruct(self):
+        x = jnp.arange(-128, 128, dtype=jnp.int8)
+        planes = quant.input_bitplanes(x)
+        bw = quant.bit_weights()
+        rec = (planes * bw[:, None]).sum(0)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(x, dtype=np.int32))
+
+
+class TestQuantError:
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(0, 2**31 - 1), st.integers(4, 64), st.integers(4, 64))
+    def test_weight_quant_error_bound(self, seed, m, n):
+        w = jax.random.normal(jax.random.key(seed), (m, n))
+        q, s = quant.quantize_weight(w)
+        err = jnp.abs(q.astype(jnp.float32) * s - w)
+        assert float(err.max()) <= float(s.max()) * 0.5 + 1e-6
+
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(4, 256))
+    def test_activation_quant_relative_error(self, seed, b, d):
+        x = jax.random.normal(jax.random.key(seed), (b, d)) * 10
+        q, s = quant.quantize_activation(x)
+        rec = q.astype(jnp.float32) * s
+        assert float(jnp.abs(rec - x).max()) <= float(s.max()) * 0.5 + 1e-5
+
+    def test_kv_quant_per_head(self):
+        x = jax.random.normal(jax.random.key(0), (2, 8, 4, 16))
+        q, s = quant.quantize_kv(x)
+        assert s.shape == (2, 8, 4, 1)
+        rec = quant.dequantize_kv(q, s)
+        assert float(jnp.abs(rec - x).max() / jnp.abs(x).max()) < 0.01
+
+    def test_smoothquant_balances_ranges(self):
+        act_amax = jnp.array([100.0, 1.0, 10.0])
+        w_amax = jnp.array([1.0, 1.0, 1.0])
+        s = quant.smooth_factors(act_amax, w_amax, alpha=0.5)
+        assert s[0] > s[2] > s[1]
+
+    def test_int8_matmul_ref_matches_fp(self):
+        key = jax.random.key(1)
+        x = jax.random.normal(key, (8, 64))
+        w = jax.random.normal(jax.random.key(2), (64, 32))
+        lin = quant.make_quantized_linear(w)
+        x_q, x_s = quant.quantize_activation(x)
+        out = quant.int8_matmul_ref(x_q, x_s, lin)
+        rel = jnp.abs(out - x @ w).max() / jnp.abs(x @ w).max()
+        assert float(rel) < 0.03
