@@ -1,4 +1,4 @@
-"""QLC-SLC hybrid KV cache (Sec. IV-A, Fig. 10d).
+"""QLC-SLC hybrid KV cache (Sec. IV-A, Fig. 10d) with slotted residency.
 
 Weights live in the dense, never-written "QLC region" (int8, nibble-packable)
 while the KV cache lives in the fast-append "SLC region": int8 entries with
@@ -6,12 +6,20 @@ per-(token, head) scales, appended in place every generated token.  On TPU
 the SLC region is an int8 buffer updated with ``dynamic_update_slice`` —
 cheap, constant-time appends, exactly the paper's write-friendly role.
 
+For continuous batching the batch axis is a pool of *slots*: each slot holds
+one in-flight request at its own sequence position, so appends land at a
+heterogeneous ``[B]`` position vector (vmapped ``dynamic_update_slice`` —
+the SLC-region analogue of paged KV, one page per request).  Slots are
+allocated when a request is admitted and freed (length reset to 0) when it
+retires; the backing buffers never reallocate, so ``cache_bytes`` is
+invariant under slot churn.
+
 Layouts (per layer, stacked over layers as the leading axis):
   k_q, v_q     : [L, B, S_max, H_kv, D_h]  int8
   k_s, v_s     : [L, B, S_max, H_kv, 1]    f32
   (MLA latent) : [L, B, S_max, C_latent]   int8 (+ scale)
 SSM layers instead carry a fixed-size recurrent state — the most
-flash-write-friendly cache of all (constant footprint; see DESIGN.md Sec. 4).
+flash-write-friendly cache of all (constant footprint; see DESIGN.md).
 """
 from __future__ import annotations
 
@@ -24,6 +32,30 @@ import jax.numpy as jnp
 from repro.core.quant import quantize_kv
 
 
+def slot_positions(pos: jax.Array | int, batch: int) -> jax.Array:
+    """Normalise a scalar or [B] position argument to a [B] int32 vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = pos[None]
+    return jnp.broadcast_to(pos, (batch,))
+
+
+def batched_update(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``new[b]`` into ``buf[b]`` at sequence offset ``pos[b]``.
+
+    buf: [B, S, ...]; new: [B, T, ...]; pos: [B] int32 (clamped by XLA).
+    The vmapped ``dynamic_update_slice`` is the batched SLC append: every
+    slot lands at its own position in one fused update.
+    """
+    pos = slot_positions(pos, buf.shape[0])
+
+    def one(b, n, p):
+        return jax.lax.dynamic_update_slice(b, n.astype(b.dtype),
+                                            (p,) + (0,) * (b.ndim - 1))
+
+    return jax.vmap(one)(buf, new, pos)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class KVCache:
@@ -31,43 +63,64 @@ class KVCache:
     k_s: jax.Array
     v_q: jax.Array
     v_s: jax.Array
-    length: jax.Array            # [] int32 — tokens currently cached
+    lengths: jax.Array           # [B] int32 — tokens cached per slot
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_q.shape[1]
 
     @property
     def max_len(self) -> int:
         return self.k_q.shape[2]
 
 
-def init_cache(n_layers: int, batch: int, max_len: int, n_kv_heads: int,
+def init_cache(n_layers: int, n_slots: int, max_len: int, n_kv_heads: int,
                head_dim: int) -> KVCache:
-    shape = (n_layers, batch, max_len, n_kv_heads, head_dim)
-    sshape = (n_layers, batch, max_len, n_kv_heads, 1)
+    shape = (n_layers, n_slots, max_len, n_kv_heads, head_dim)
+    sshape = (n_layers, n_slots, max_len, n_kv_heads, 1)
     return KVCache(
         k_q=jnp.zeros(shape, jnp.int8),
         k_s=jnp.zeros(sshape, jnp.float32),
         v_q=jnp.zeros(shape, jnp.int8),
         v_s=jnp.zeros(sshape, jnp.float32),
-        length=jnp.zeros((), jnp.int32),
+        lengths=jnp.zeros((n_slots,), jnp.int32),
     )
 
 
 def append_layer(cache: KVCache, layer: int, k: jax.Array, v: jax.Array,
-                 pos: jax.Array) -> KVCache:
-    """Append one step's k/v ([B, T, H_kv, D_h] float) at position ``pos``."""
+                 pos: jax.Array | int) -> KVCache:
+    """Append one step's k/v ([B, T, H_kv, D_h] float) at position ``pos``.
+
+    ``pos`` may be a scalar (all slots aligned — the single-batch paper
+    setting) or a [B] vector of heterogeneous per-slot positions.
+    """
     k_q, k_s = quantize_kv(k)
     v_q, v_s = quantize_kv(v)
-    idx = (layer, 0, pos, 0, 0)
     return dataclasses.replace(
         cache,
-        k_q=jax.lax.dynamic_update_slice(cache.k_q, k_q[None], idx),
-        k_s=jax.lax.dynamic_update_slice(cache.k_s, k_s[None], idx),
-        v_q=jax.lax.dynamic_update_slice(cache.v_q, v_q[None], idx),
-        v_s=jax.lax.dynamic_update_slice(cache.v_s, v_s[None], idx),
+        k_q=cache.k_q.at[layer].set(batched_update(cache.k_q[layer], k_q, pos)),
+        k_s=cache.k_s.at[layer].set(batched_update(cache.k_s[layer], k_s, pos)),
+        v_q=cache.v_q.at[layer].set(batched_update(cache.v_q[layer], v_q, pos)),
+        v_s=cache.v_s.at[layer].set(batched_update(cache.v_s[layer], v_s, pos)),
     )
 
 
-def bump_length(cache: KVCache, n: int = 1) -> KVCache:
-    return dataclasses.replace(cache, length=cache.length + n)
+def bump_length(cache, n: jax.Array | int = 1):
+    """Advance per-slot lengths; ``n`` may be scalar or a [B] mask/step."""
+    return dataclasses.replace(cache, lengths=cache.lengths + n)
+
+
+def alloc_slot(cache, slot: jax.Array | int, length: jax.Array | int):
+    """Claim ``slot`` for a request whose prompt occupies ``length`` tokens."""
+    return dataclasses.replace(
+        cache, lengths=cache.lengths.at[slot].set(jnp.int32(length)))
+
+
+def free_slot(cache, slot: jax.Array | int):
+    """Retire a slot: its length drops to 0 and the stale int8 rows are
+    simply overwritten by the next resident (no erase cycle — the SLC
+    write-in-place discipline)."""
+    return dataclasses.replace(cache, lengths=cache.lengths.at[slot].set(0))
 
 
 def layer_view(cache: KVCache, layer: int) -> tuple[jax.Array, ...]:
@@ -82,31 +135,35 @@ class LatentCache:
     576-dim latent instead of per-head K/V — ~14x smaller appends."""
     c_q: jax.Array               # [L, B, S_max, C] int8
     c_s: jax.Array               # [L, B, S_max, 1] f32
-    length: jax.Array
+    lengths: jax.Array           # [B] int32
+
+    @property
+    def n_slots(self) -> int:
+        return self.c_q.shape[1]
 
     @property
     def max_len(self) -> int:
         return self.c_q.shape[2]
 
 
-def init_latent_cache(n_layers: int, batch: int, max_len: int, dim: int) -> LatentCache:
+def init_latent_cache(n_layers: int, n_slots: int, max_len: int,
+                      dim: int) -> LatentCache:
     return LatentCache(
-        c_q=jnp.zeros((n_layers, batch, max_len, dim), jnp.int8),
-        c_s=jnp.zeros((n_layers, batch, max_len, 1), jnp.float32),
-        length=jnp.zeros((), jnp.int32),
+        c_q=jnp.zeros((n_layers, n_slots, max_len, dim), jnp.int8),
+        c_s=jnp.zeros((n_layers, n_slots, max_len, 1), jnp.float32),
+        lengths=jnp.zeros((n_slots,), jnp.int32),
     )
 
 
 def append_latent(cache: LatentCache, layer: int, c: jax.Array,
-                  pos: jax.Array) -> LatentCache:
+                  pos: jax.Array | int) -> LatentCache:
     amax = jnp.max(jnp.abs(c), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / 127.0
     c_q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
-    idx = (layer, 0, pos, 0)
     return dataclasses.replace(
         cache,
-        c_q=jax.lax.dynamic_update_slice(cache.c_q, c_q[None], idx),
-        c_s=jax.lax.dynamic_update_slice(cache.c_s, scale[None], idx),
+        c_q=cache.c_q.at[layer].set(batched_update(cache.c_q[layer], c_q, pos)),
+        c_s=cache.c_s.at[layer].set(batched_update(cache.c_s[layer], scale, pos)),
     )
 
 

@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared Pallas/TPU compatibility helpers for the kernel suite."""
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    """Build pltpu compiler params across JAX versions.
+
+    ``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+    newer JAX releases; the pinned toolchain may carry either name.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

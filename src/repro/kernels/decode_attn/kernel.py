@@ -23,12 +23,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 BLOCK_S = 512
 NEG_INF = -1e30
 
 
 def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
             m_ref, l_ref, acc_ref, *, n_s: int, bs: int, d: int):
+    b_idx = pl.program_id(0)
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -44,7 +47,7 @@ def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
     scores = (s_int.astype(jnp.float32) * qs_ref[...]
               * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
     pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)
+    scores = jnp.where(pos < len_ref[b_idx], scores, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
     m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
@@ -66,7 +69,8 @@ def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
 def decode_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, length, *,
                        bs: int = BLOCK_S, interpret: bool = True):
     """q_q: [B,G,rep,D] int8; q_s: [B,G,rep,1] f32; k_q/v_q: [B,S,G,D] int8;
-    k_s/v_s: [B,S,G] f32; length: [1] int32 -> out [B,G,rep,D] f32."""
+    k_s/v_s: [B,S,G] f32; length: [B] (or [1], broadcast) int32 per-slot
+    cache lengths -> out [B,G,rep,D] f32."""
     B, G, rep, D = q_q.shape
     S = k_q.shape[1]
     bs = min(bs, S)
@@ -92,6 +96,6 @@ def decode_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, length, *,
             pltpu.VMEM((rep, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(length, q_q, q_s, k_q, k_s, v_q, v_s)

@@ -5,12 +5,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.core.kvcache import slot_positions
 from repro.kernels.decode_attn import kernel as K
 
 
 def decode_attention(q, k_q, k_s, v_q, v_s, length, interpret: bool = True):
     """q: [B,1,H,D] float; k_q/v_q: [B,S,G,D] int8; k_s/v_s: [B,S,G,1] f32;
-    length: scalar int32 -> [B,1,H,D]."""
+    length: scalar int32 (aligned batch) or [B] per-slot lengths
+    -> [B,1,H,D]."""
     B, _, H, D = q.shape
     G = k_q.shape[2]
     rep = H // G
@@ -18,7 +20,7 @@ def decode_attention(q, k_q, k_s, v_q, v_s, length, interpret: bool = True):
     q_q, q_s = quant.quantize_kv(qh)
     q_q = q_q.reshape(B, G, rep, D)
     q_s = q_s.reshape(B, G, rep, 1)
-    ln = jnp.asarray(length, jnp.int32).reshape(1)
+    ln = slot_positions(length, B)
     out = K.decode_attn_pallas(q_q, q_s, k_q, k_s[..., 0], v_q, v_s[..., 0],
                                ln, interpret=interpret)
     return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 BLOCK_M = 128
 BLOCK_K = 512
 BLOCK_N = 256
@@ -60,6 +62,6 @@ def int8_matmul_pallas(x_q, x_s, w_q, w_s, *, bm: int = BLOCK_M,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x_q, w_q, x_s, ws2)

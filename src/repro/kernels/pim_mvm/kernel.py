@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 # PIM plane-op tile (Size A): 128 rows x 512 cols
 BLOCK_M = 8
 BLOCK_K = 128      # u: simultaneously activated BLSs
@@ -81,6 +83,6 @@ def pim_mvm_pallas(x_q: jax.Array, x_s: jax.Array, w_hi: jax.Array,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x_q, w_hi, w_lo, x_s, ws2)

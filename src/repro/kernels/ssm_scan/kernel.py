@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 BLOCK_H = 4          # heads per grid step
 
 
@@ -87,6 +89,6 @@ def ssd_chunk_pallas(x, B, C, dt, A, D, h_in, *, bh: int = BLOCK_H,
             jax.ShapeDtypeStruct((N, H), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(x, B, C, dt, A, D, h_in)

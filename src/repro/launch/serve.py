@@ -1,33 +1,30 @@
 """Serving entry point: batched prompts -> prefill -> W8A8 PIM-path decode.
 
+Fixed single-batch mode (the paper's setting):
+
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --reduced \
         --batch 4 --prompt-len 32 --steps 32
+
+Continuous-batching mode (variable-length prompts through the slot
+scheduler, with queueing and mid-flight backfill):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --reduced \
+        --continuous --requests 12 --slots 4 --steps 32
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
+import numpy as np
 
 from repro.configs import registry
 from repro.models import model as M
-from repro.serve.engine import Engine
+from repro.serve.engine import ContinuousBatchingEngine, Engine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="opt-125m")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--no-quantize", action="store_true")
-    args = ap.parse_args()
-
-    cfg = registry.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = M.init_params(jax.random.key(0), cfg)
+def _run_fixed(cfg, params, args):
     eng = Engine(cfg=cfg, params=params,
                  max_len=args.prompt_len + args.steps + 1,
                  quantize=not args.no_quantize)
@@ -47,6 +44,56 @@ def main():
           f"decode: {times['decode_s']*1e3:.1f} ms   "
           f"TPOT: {times['tpot_s']*1e3:.2f} ms")
     print("sample tokens:", toks[0, :10].tolist())
+
+
+def _run_continuous(cfg, params, args):
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.steps + 1
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
+                                   max_len=max_len,
+                                   quantize=not args.no_quantize)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(4, args.prompt_len + 1)).tolist()
+               for _ in range(args.requests)]
+    budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
+               for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, budgets)]
+    eng.drain()
+    wall = time.perf_counter() - t0
+    gen = sum(len(r.output) for r in reqs)
+    lat = sorted(r.finish_time - r.arrival_time for r in reqs)
+    print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
+          f"prompts 4..{args.prompt_len} budgets "
+          f"{args.steps//2}..{args.steps}")
+    print(f"generated {gen} tokens in {wall:.2f}s -> {gen/wall:.1f} tok/s | "
+          f"latency p50 {lat[len(lat)//2]*1e3:.0f} ms  "
+          f"p99 {lat[min(len(lat)-1, int(0.99*len(lat)))]*1e3:.0f} ms")
+    print("sample tokens:", reqs[0].output[:10])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a ragged request stream via the slot scheduler")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    if args.continuous:
+        _run_continuous(cfg, params, args)
+    else:
+        _run_fixed(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import quant
+from repro.core import kvcache as KV
 from repro.models import layers as L
 
 Params = dict[str, Any]
@@ -63,11 +64,15 @@ def _causal_chunk_mask(q_pos, k_pos):
 
 
 def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
-                    kv_block: int = 1024) -> jax.Array:
+                    kv_block: int = 1024, kv_lengths=None) -> jax.Array:
     """Memory-bounded attention: lax.scan over KV blocks with running
     (max, denom) statistics.  q: [B, Tq, H, Dk]; k: [B, Tk, G, Dk];
     v: [B, Tk, G, Dv] with G = kv heads (GQA groups computed natively —
     no head replication is ever materialised).  FLOPs match dense attention.
+
+    ``kv_lengths`` ([B] int32, optional) masks keys at and beyond each
+    request's true prompt length — ragged right-padded batches attend only
+    to their own valid prefix.
     """
     B, Tq, H, Dk = q.shape
     G = k.shape[2]
@@ -93,7 +98,11 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
         mask = (_causal_chunk_mask(q_pos, k_pos) if causal
                 else jnp.ones((Tq, blk), bool))
         valid = (k_pos < Tk)
-        s = jnp.where((mask & valid[None, :])[None, None, None], s, NEG_INF)
+        mask = (mask & valid[None, :])[None]                 # [1, Tq, blk]
+        if kv_lengths is not None:
+            # ragged batch: key b is live only below its request's length
+            mask = mask & (k_pos[None, None, :] < kv_lengths[:, None, None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -112,8 +121,10 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
 
 
 def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-                backend: str = "dense") -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
-    """Training / prefill GQA.  Returns (out, (k, v)) for KV caching."""
+                backend: str = "dense", lengths: jax.Array | None = None,
+                ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Training / prefill GQA.  Returns (out, (k, v)) for KV caching.
+    ``lengths`` ([B], optional) masks padding keys in ragged batches."""
     B, T, _ = x.shape
     hd = cfg.head_dim
     q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, T, cfg.n_heads, hd)
@@ -125,7 +136,7 @@ def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     if cfg.rope_theta:
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-    o = flash_attention(q, k, v)
+    o = flash_attention(q, k, v, kv_lengths=lengths)
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
     return out, (k, v)
 
@@ -140,12 +151,15 @@ def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
 
     QK^T as integer VVMs (q quantized per-head), SV as the row-wise product:
     softmax weights scatter over V rows, never transposing the S axis.
-    GQA groups are computed natively (no cache replication).
+    GQA groups are computed natively (no cache replication).  ``length`` is a
+    scalar (aligned batch) or a [B] vector of per-slot cache lengths
+    (continuous batching: every slot masks to its own resident prefix).
     """
     if backend in ("fused_int8", "pallas"):
         from repro.kernels.decode_attn import ops as da_ops
         return da_ops.decode_attention(q, k_q, k_s, v_q, v_s, length)
     B, _, H, D = q.shape
+    lengths = KV.slot_positions(length, B)
     G = k_q.shape[2]
     rep = H // G
     qh = q.reshape(B, H, D)
@@ -159,7 +173,7 @@ def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
     k_sc = k_s[..., 0].transpose(0, 2, 1)[:, :, None, :]   # [B,G,1,S]
     scores = s_int.astype(jnp.float32) * q_scale * k_sc / math.sqrt(D)
     S = k_q.shape[1]
-    mask = jnp.arange(S)[None, None, None, :] < length
+    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)                  # controller op, fp32
     vf = (v_q.astype(inter_dtype) * v_s.astype(inter_dtype))   # [B,S,G,D]
@@ -171,9 +185,12 @@ def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
 def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                k_q, k_s, v_q, v_s, backend: str = "dense",
                inter_dtype=jnp.float32):
-    """One-token decode.  Returns (out, (k_new, v_new)) to append to cache."""
+    """One-token decode.  Returns (out, (k_new, v_new)) to append to cache.
+    ``pos`` is a scalar (aligned batch) or [B] vector of per-slot positions —
+    each slot's k/v appends at its own SLC offset (vmapped update)."""
     B = x.shape[0]
     hd = cfg.head_dim
+    pos_b = KV.slot_positions(pos, B)
     q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, 1, cfg.n_heads, hd)
     k = L.apply_linear(L._lin(p, "wk"), x, backend).reshape(B, 1, cfg.n_kv_heads, hd)
     v = L.apply_linear(L._lin(p, "wv"), x, backend).reshape(B, 1, cfg.n_kv_heads, hd)
@@ -181,18 +198,18 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
         q = L.apply_norm(p["q_norm"], q)
         k = L.apply_norm(p["k_norm"], k)
     if cfg.rope_theta:
-        pp = jnp.full((B, 1), pos, jnp.int32)
+        pp = pos_b[:, None]
         q = L.apply_rope(q, pp, cfg.rope_theta)
         k = L.apply_rope(k, pp, cfg.rope_theta)
     # current token's k/v take part via cache append done by the caller;
     # we attend over cache *including* this position, so fold it in here.
     kq_new, ks_new = quant.quantize_kv(k)
     vq_new, vs_new = quant.quantize_kv(v)
-    k_q = jax.lax.dynamic_update_slice(k_q, kq_new, (0, pos, 0, 0))
-    k_s = jax.lax.dynamic_update_slice(k_s, ks_new, (0, pos, 0, 0))
-    v_q = jax.lax.dynamic_update_slice(v_q, vq_new, (0, pos, 0, 0))
-    v_s = jax.lax.dynamic_update_slice(v_s, vs_new, (0, pos, 0, 0))
-    o = decode_attention_int8(q, k_q, k_s, v_q, v_s, pos + 1, backend,
+    k_q = KV.batched_update(k_q, kq_new, pos_b)
+    k_s = KV.batched_update(k_s, ks_new, pos_b)
+    v_q = KV.batched_update(v_q, vq_new, pos_b)
+    v_s = KV.batched_update(v_s, vs_new, pos_b)
+    o = decode_attention_int8(q, k_q, k_s, v_q, v_s, pos_b + 1, backend,
                               inter_dtype)
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, 1, -1), backend)
     return out, (k_q, k_s, v_q, v_s)
@@ -202,7 +219,7 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
 # MLA (DeepSeek-V3): compressed-latent cache; absorbed decode
 # ---------------------------------------------------------------------------
 def mla_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-                backend: str = "dense"):
+                backend: str = "dense", lengths: jax.Array | None = None):
     """Training/prefill MLA.  Returns (out, latent) where latent =
     [B, T, kv_lora + rope] is what the SLC region caches."""
     B, T, _ = x.shape
@@ -221,7 +238,7 @@ def mla_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     k_nope, v = kv[..., :dn], kv[..., dn:]
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
-    o = flash_attention(qf, k, v)
+    o = flash_attention(qf, k, v, kv_lengths=lengths)
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
     latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
     return out, latent
@@ -237,10 +254,11 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
+    pos_b = KV.slot_positions(pos, B)
     q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
     q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, 1, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    pp = jnp.full((B, 1), pos, jnp.int32)
+    pp = pos_b[:, None]
     q_rope = L.apply_rope(q_rope, pp, cfg.rope_theta)
 
     kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
@@ -251,8 +269,8 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     sc = jnp.maximum(amax, 1e-8) / 127.0
     lq = jnp.clip(jnp.round(latent_new / sc.astype(latent_new.dtype)),
                   -127, 127).astype(jnp.int8)
-    c_q = jax.lax.dynamic_update_slice(c_q, lq, (0, pos, 0))
-    c_s = jax.lax.dynamic_update_slice(c_s, sc, (0, pos, 0))
+    c_q = KV.batched_update(c_q, lq, pos_b)
+    c_s = KV.batched_update(c_s, sc, pos_b)
 
     wkv_b = (p["wkv_b"] if "wkv_b" in p else
              (p["wkv_b_q"].astype(jnp.float32) * p["wkv_b_s"])).reshape(r, H, dn + dv)
@@ -266,7 +284,7 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                          cache[..., r:], preferred_element_type=jnp.float32))
     scores = scores / math.sqrt(dn + dr)
     S = c_q.shape[1]
-    mask = jnp.arange(S)[None, None, :] < (pos + 1)
+    mask = jnp.arange(S)[None, None, :] < (pos_b + 1)[:, None, None]
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", w.astype(inter_dtype), cache[..., :r],

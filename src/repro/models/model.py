@@ -88,10 +88,13 @@ def train_loss(params, cfg: ModelConfig, batch: dict, rt: Runtime):
 
 
 def prefill(params, cfg: ModelConfig, batch: dict, max_len: int, rt: Runtime):
+    """``batch`` may carry ``lengths`` ([B] int32) for ragged right-padded
+    prompts — threaded through attention masking and last-logit gathering."""
     if cfg.family == "encdec":
         return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
                               max_len, rt)
-    return T.prefill(params, cfg, batch["inputs"], max_len, rt)
+    return T.prefill(params, cfg, batch["inputs"], max_len, rt,
+                     lengths=batch.get("lengths"))
 
 
 def decode_step(params, cfg: ModelConfig, state: dict, token, rt: Runtime):

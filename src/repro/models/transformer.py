@@ -283,7 +283,12 @@ def forward_train(p: Params, cfg: ModelConfig, inputs: jax.Array,
 # decode state
 # ---------------------------------------------------------------------------
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    """Nested cache pytree mirroring the group/slot structure."""
+    """Nested cache pytree mirroring the group/slot structure.
+
+    ``pos`` is a [B] vector: each batch row is an independent *slot* whose
+    sequence position advances on its own (continuous batching).  The
+    aligned single-batch path is the special case of equal entries.
+    """
     groups = []
     for (start, count, period) in layer_groups(cfg):
         n_p = count // period
@@ -306,7 +311,25 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
                     "k_q": jnp.zeros(kv, jnp.int8), "k_s": jnp.zeros(sc, jnp.float32),
                     "v_q": jnp.zeros(kv, jnp.int8), "v_s": jnp.zeros(sc, jnp.float32)})
         groups.append(tuple(slots))
-    return {"groups": tuple(groups), "pos": jnp.zeros((), jnp.int32)}
+    return {"groups": tuple(groups), "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def write_slot(state: dict, slot: jax.Array, one: dict) -> dict:
+    """Land a single-request decode state (batch=1) into row ``slot`` of a
+    pooled multi-slot state — the admission step of continuous batching.
+
+    Every cache leaf under ``groups`` carries the slot axis at position 1
+    ([n_p, B, ...]); ``pos`` is the [B] per-slot position vector.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    new_groups = jax.tree.map(
+        lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+            full, row.astype(full.dtype), slot, axis=1),
+        state["groups"], one["groups"])
+    pos = jax.lax.dynamic_update_slice(
+        jnp.asarray(state["pos"], jnp.int32),
+        jnp.asarray(one["pos"], jnp.int32).reshape(1), (slot,))
+    return {"groups": new_groups, "pos": pos}
 
 
 def apply_layer_decode(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
@@ -337,14 +360,16 @@ def apply_layer_decode(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
 
 def decode_step(p: Params, cfg: ModelConfig, state: dict, token: jax.Array,
                 rt: Runtime) -> tuple[jax.Array, dict]:
-    """token: [B] (or [B, d] embedding) -> (logits [B, V], new state)."""
-    pos = state["pos"]
+    """token: [B] (or [B, d] embedding) -> (logits [B, V], new state).
+    ``state["pos"]`` is [B]: slots decode at heterogeneous positions."""
+    pos = jnp.broadcast_to(jnp.asarray(state["pos"], jnp.int32),
+                           (token.shape[0],))
     if cfg.input_mode == "embeddings" and token.ndim == 2:
         x = token[:, None, :]
     else:
         x = p["embed"]["w"][token][:, None]
     if not cfg.rope_theta:
-        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[:, None]
     new_groups = []
     for (start, count, period), slots, caches in zip(
             layer_groups(cfg), p["groups"], state["groups"]):
@@ -379,26 +404,38 @@ def decode_step(p: Params, cfg: ModelConfig, state: dict, token: jax.Array,
 
 
 def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
-    """Single-position sinusoidal embedding (no table materialisation)."""
+    """Sinusoidal embedding at ``pos`` (scalar -> [d]; [B] -> [B, d]) with no
+    table materialisation — each slot sits at its own position."""
     div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
-    ang = pos.astype(jnp.float32) * div
-    pe = jnp.zeros((d,), jnp.float32)
-    return pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    ang = jnp.asarray(pos).astype(jnp.float32)[..., None] * div
+    pe = jnp.zeros((*ang.shape[:-1], d), jnp.float32)
+    return pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
 
 
 # ---------------------------------------------------------------------------
 # prefill: run the train forward but also build the decode cache
 # ---------------------------------------------------------------------------
 def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
-            rt: Runtime) -> tuple[jax.Array, dict]:
+            rt: Runtime, lengths: jax.Array | None = None,
+            ) -> tuple[jax.Array, dict]:
     """Process a prompt of length T; return (last-token logits, decode state).
 
     The prefill pass is the "GPU stage" of the paper's pipeline: full-width
     bf16 compute, after which K/V are quantized into the int8 SLC cache.
+
+    ``lengths`` ([B] int32, optional) admits a *ragged* right-padded batch:
+    attention masks each row's keys to its own prefix, logits are gathered at
+    each row's last real token, and the returned state carries per-slot
+    positions.  Exact for attention layers (causal masking isolates the
+    padded tail); SSM/hybrid stacks scan the padding through their recurrent
+    state, so ragged prefill for those families should go through per-request
+    prefill instead (the serve engine does).
     """
     x = _embed(p, cfg, inputs)
     B, T = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    if lengths is not None:
+        lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     state = init_decode_state(cfg, B, max_len)
     new_groups = []
     for (start, count, period), slots, caches in zip(
@@ -417,7 +454,7 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
                                             return_state=True)
                 elif cfg.attn_type == "mla":
                     mix, latent = A.mla_forward(pp["attn"], cfg, h, positions,
-                                                rt.backend)
+                                                rt.backend, lengths=lengths)
                     amax = jnp.max(jnp.abs(latent), -1, keepdims=True)
                     sc = jnp.maximum(amax, 1e-8) / 127.0
                     lq = jnp.clip(jnp.round(latent / sc), -127, 127).astype(jnp.int8)
@@ -428,7 +465,7 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
                               c["c_s"], sc.astype(jnp.float32), (0, 0, 0))}
                 else:
                     mix, (k, v) = A.gqa_forward(pp["attn"], cfg, h, positions,
-                                                rt.backend)
+                                                rt.backend, lengths=lengths)
                     from repro.core.quant import quantize_kv
                     # land k/v on the cache's sharding *before* quantizing so
                     # the quantize+update pipeline doesn't bounce layouts
@@ -459,9 +496,15 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
         x, new_caches = jax.lax.scan(body, x, (slots, caches))
         new_groups.append(new_caches)
     x = L.apply_norm(p["ln_f"], x)
-    logits = _lm_head(p, cfg, x[:, -1], rt)
-    return logits, {"groups": tuple(new_groups),
-                    "pos": jnp.array(T, jnp.int32)}
+    if lengths is None:
+        last = x[:, -1]
+        pos = jnp.full((B,), T, jnp.int32)
+    else:
+        last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        pos = lengths
+    logits = _lm_head(p, cfg, last, rt)
+    return logits, {"groups": tuple(new_groups), "pos": pos}
 
 
 # ---------------------------------------------------------------------------

@@ -1,23 +1,35 @@
-"""Serving engine: the paper's offload pipeline as a runnable system.
+"""Serving engines: the paper's offload pipeline as a runnable system.
 
 `prefill` is the "GPU stage" (full-precision summarization); its K/V land
-quantized in the int8 SLC cache; `decode` loops the W8A8 PIM path.  The
-engine batches concurrent requests (left-padding-free: same-length synthetic
-prompts per batch) and tracks per-request state.
+quantized in the int8 SLC cache; `decode` loops the W8A8 PIM path.
+
+Two engines share that pipeline:
+
+* ``Engine`` — the paper's single-batch setting: one fixed batch of
+  same-length prompts, prefill once, decode in lockstep.
+* ``ContinuousBatchingEngine`` — the serving system: a request queue +
+  slot scheduler admits variable-length prompts, packs active requests
+  into decode slots (rows of the pooled SLC cache at heterogeneous
+  positions), retires finished sequences, and backfills freed slots
+  mid-flight.  The jitted decode step always sees a fixed [n_slots]
+  batch, so continuous batching costs zero recompiles.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.models import transformer as T
 from repro.models.transformer import Runtime
 from repro.serve.quantize import quantize_tree
+from repro.serve.scheduler import Request, RequestState, Scheduler
 
 
 @dataclasses.dataclass
@@ -61,3 +73,135 @@ class Engine:
         return (jnp.stack(toks, axis=1),
                 {"prefill_s": t_prefill, "decode_s": t_decode,
                  "tpot_s": t_decode / max(1, steps)})
+
+
+class ContinuousBatchingEngine:
+    """Iteration-level scheduling over a fixed pool of decode slots.
+
+    Each engine ``step()`` is one serving iteration:
+
+      1. retire finished requests (slots freed for backfill);
+      2. admit queued requests into free slots — each admission runs a
+         single-request prefill (the "GPU stage") and lands its int8 KV
+         row plus per-slot position into the pooled decode state;
+      3. one batched W8A8 decode step over all slots; active slots emit
+         their next token, inactive slots compute into masked garbage.
+
+    Prefill shapes are bucketed (multiples of ``prefill_bucket``) for pure
+    attention stacks — ragged right-padding is exact there thanks to the
+    per-request length masking in :func:`repro.models.transformer.prefill`.
+    SSM/hybrid stacks prefill at exact prompt length (their recurrent state
+    would integrate padding), paying one compile per distinct length.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int = 4,
+                 max_len: int = 256, quantize: bool = True,
+                 rt: Runtime | None = None, prefill_bucket: int = 16):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "continuous batching targets decoder-only LMs")
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt or Runtime()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.qparams = quantize_tree(params) if quantize else params
+        self._has_ssm = any(cfg.layer_kind(i) == "ssm"
+                            for i in range(cfg.n_layers))
+        self.scheduler = Scheduler(n_slots, max_len)
+        self.state = M.init_decode_state(cfg, n_slots, max_len)
+        self._last_tok = np.zeros((n_slots,), np.int32)
+        self._next_rid = 0
+        self._t0 = time.perf_counter()
+
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, cfg, b, max_len, self.rt))
+        self._decode = jax.jit(
+            lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
+        self._write = jax.jit(T.write_slot)
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, prompt: Iterable[int], max_new_tokens: int,
+               eos_id: int | None = None,
+               arrival_time: float | None = None) -> Request:
+        req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      arrival_time=(self._now() if arrival_time is None
+                                    else arrival_time))
+        self._next_rid += 1
+        self.scheduler.submit(req)
+        return req
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def reset_clock(self) -> None:
+        """Re-zero the engine clock (e.g. after compile warm-up) so request
+        timestamps share the caller's timebase."""
+        self._t0 = time.perf_counter()
+
+    # -- admission: per-request prefill into a slot -----------------------
+    def _bucket(self, n: int) -> int:
+        if self._has_ssm:
+            return n                       # exact: no padding through SSM state
+        b = self.prefill_bucket
+        return min(self.max_len, -(-n // b) * b)
+
+    def _admit_one(self, req: Request) -> None:
+        plen = req.prompt_len
+        padded = self._bucket(plen)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :plen] = req.prompt
+        batch = {"inputs": jnp.asarray(toks)}
+        if padded != plen or not self._has_ssm:
+            batch["lengths"] = jnp.array([plen], jnp.int32)
+        logits, one = self._prefill(self.params, batch)
+        self.state = self._write(self.state, jnp.int32(req.slot), one)
+        tok = int(jnp.argmax(logits, -1)[0])
+        req.output.append(tok)
+        req.first_token_time = self._now()
+        req.state = RequestState.DECODING
+        self._last_tok[req.slot] = tok
+
+    # -- one serving iteration --------------------------------------------
+    def step(self) -> bool:
+        """Run one engine iteration; returns True if any work was done."""
+        now = self._now()
+        for slot, req in list(self.scheduler.active.items()):
+            if req.should_stop():
+                self.scheduler.retire(req, now)
+        for req in self.scheduler.admit(now):
+            self._admit_one(req)
+            if req.should_stop():                   # budget of 1 token
+                self.scheduler.retire(req, self._now())
+        if not self.scheduler.active:
+            return False
+        logits, self.state = self._decode(
+            self.qparams, self.state, jnp.asarray(self._last_tok))
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        now = self._now()
+        for slot, req in list(self.scheduler.active.items()):
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self._last_tok[slot] = tok
+            if req.should_stop():
+                self.scheduler.retire(req, now)
+        return True
+
+    # -- drive to completion ----------------------------------------------
+    def drain(self) -> None:
+        """Step until the queue and all slots are empty."""
+        while self.scheduler.has_work():
+            self.step()
+
+    def generate_all(self, prompts: list[list[int]],
+                     max_new_tokens: int | list[int],
+                     eos_id: int | None = None) -> list[list[int]]:
+        """Convenience: submit a ragged batch of prompts, run to completion,
+        return outputs in submission order."""
+        budgets = (max_new_tokens if isinstance(max_new_tokens, list)
+                   else [max_new_tokens] * len(prompts))
+        reqs = [self.submit(p, m, eos_id) for p, m in zip(prompts, budgets)]
+        self.drain()
+        return [r.output for r in reqs]

@@ -1,0 +1,135 @@
+"""Request queue + slot scheduler for continuous batching.
+
+Host-side control plane for the serve engine: requests arrive with
+variable-length prompts, wait in a FIFO queue, are admitted into free decode
+*slots* (rows of the pooled SLC-region KV cache), and retire when they hit
+their token budget or emit EOS — freeing the slot for the next queued
+request mid-flight (backfill).  The device never sees any of this: it always
+steps a fixed [n_slots] batch, and the scheduler just decides which rows are
+live.
+
+The slot lifecycle mirrors the paper's SLC-region residency:
+
+    QUEUED --admit--> PREFILLING --first token--> DECODING --retire--> FINISHED
+                (slot allocated)                        (slot freed, reused)
+
+Slots are reused lowest-index-first so admission order is deterministic and
+testable.  All scheduling is O(queue) Python on the host — the jitted decode
+step stays shape-stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from collections import deque
+from typing import Optional
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request flowing through the engine."""
+    rid: int
+    prompt: list[int]                     # token ids (len >= 1)
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0
+
+    # filled in by the scheduler / engine
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    output: list[int] = dataclasses.field(default_factory=list)
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    def should_stop(self) -> bool:
+        if len(self.output) >= self.max_new_tokens:
+            return True
+        return self.eos_id is not None and bool(self.output) \
+            and self.output[-1] == self.eos_id
+
+
+class Scheduler:
+    """FIFO admission into a fixed pool of decode slots.
+
+    ``max_len`` bounds prompt + generation per slot; a request that cannot
+    ever fit is rejected at submit time (ValueError) rather than deadlocking
+    the queue.
+    """
+
+    def __init__(self, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError("need at least one decode slot")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.free_slots: list[int] = list(range(n_slots))   # min-heap
+        heapq.heapify(self.free_slots)
+        self.active: dict[int, Request] = {}                # slot -> request
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                "(prefill always emits the first token)")
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + budget "
+                f"{req.max_new_tokens} exceeds slot capacity {self.max_len}")
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    # -- admission --------------------------------------------------------
+    def admit(self, now: float = 0.0) -> list[Request]:
+        """Move queued requests into free slots, FIFO, until slots run out.
+        Returns the newly admitted requests (slot assigned, PREFILLING)."""
+        admitted = []
+        while self.queue and self.free_slots:
+            req = self.queue.popleft()
+            slot = heapq.heappop(self.free_slots)
+            req.slot = slot
+            req.state = RequestState.PREFILLING
+            req.admit_time = now
+            self.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    # -- retirement -------------------------------------------------------
+    def retire(self, req: Request, now: float = 0.0) -> None:
+        """Finish a request and free its slot for backfill."""
+        assert req.slot is not None and self.active.get(req.slot) is req
+        del self.active[req.slot]
+        heapq.heappush(self.free_slots, req.slot)
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+        req.slot = None
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)

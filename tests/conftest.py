@@ -1,0 +1,22 @@
+"""Shared test configuration: force CPU and pin seeds for determinism.
+
+``JAX_PLATFORMS`` must land before the first ``import jax`` in any test
+module, which conftest import order guarantees.  Subprocess-based tests
+(test_distributed) inherit the environment.
+"""
+import os
+import random
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _pin_seeds():
+    """Every test starts from the same host-side RNG state; JAX randomness
+    is already explicit via jax.random keys."""
+    random.seed(0)
+    np.random.seed(0)
+    yield

@@ -1,0 +1,132 @@
+"""Slotted SLC-region KV cache: per-slot-length append/free round-trips and
+the cache_bytes-invariance-under-churn property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kvcache as KV
+
+jax.config.update("jax_platform_name", "cpu")
+
+L, B, S, H, D = 2, 3, 16, 2, 8
+
+
+def _kv(key, t=1):
+    k1, k2 = jax.random.split(jax.random.key(key))
+    return (jax.random.normal(k1, (B, t, H, D)),
+            jax.random.normal(k2, (B, t, H, D)))
+
+
+class TestSlottedAppend:
+    def test_heterogeneous_append_lands_per_slot(self):
+        cache = KV.init_cache(L, B, S, H, D)
+        k, v = _kv(0)
+        pos = jnp.array([0, 5, 11], jnp.int32)
+        cache = KV.append_layer(cache, 0, k, v, pos)
+        from repro.core.quant import quantize_kv
+        k_q, _ = quantize_kv(k)
+        for b, p in enumerate([0, 5, 11]):
+            np.testing.assert_array_equal(
+                np.asarray(cache.k_q[0, b, p]), np.asarray(k_q[b, 0]))
+        # untouched rows stay zero
+        assert int(jnp.abs(cache.k_q[0, 0, 1:]).max()) == 0
+        assert int(jnp.abs(cache.k_q[1]).max()) == 0      # other layer
+
+    def test_scalar_pos_matches_vector_pos(self):
+        """The aligned single-batch path is the equal-entries special case."""
+        k, v = _kv(1)
+        c1 = KV.append_layer(KV.init_cache(L, B, S, H, D), 1, k, v, 3)
+        c2 = KV.append_layer(KV.init_cache(L, B, S, H, D), 1, k, v,
+                             jnp.full((B,), 3, jnp.int32))
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_append_free_roundtrip(self):
+        cache = KV.init_cache(L, B, S, H, D)
+        cache = KV.alloc_slot(cache, 1, 4)
+        k, v = _kv(2)
+        cache = KV.append_layer(cache, 0, k, v, cache.lengths)
+        cache = KV.bump_length(cache, jnp.array([0, 1, 0], jnp.int32))
+        assert cache.lengths.tolist() == [0, 5, 0]
+        cache = KV.free_slot(cache, 1)
+        assert cache.lengths.tolist() == [0, 0, 0]
+        # stale rows survive until overwritten (write-in-place, no erase)
+        assert int(jnp.abs(cache.k_q[0, 1, 4]).max()) > 0
+        k2, v2 = _kv(3)
+        cache = KV.append_layer(cache, 0, k2, v2, cache.lengths)
+        from repro.core.quant import quantize_kv
+        np.testing.assert_array_equal(
+            np.asarray(cache.k_q[0, 1, 0]),
+            np.asarray(quantize_kv(k2)[0][1, 0]))
+
+    def test_multi_token_append(self):
+        """Prefill-style appends (T>1) land contiguously from each slot pos."""
+        cache = KV.init_cache(L, B, S, H, D)
+        k, v = _kv(4, t=3)
+        pos = jnp.array([2, 0, 7], jnp.int32)
+        cache = KV.append_layer(cache, 0, k, v, pos)
+        from repro.core.quant import quantize_kv
+        v_q, _ = quantize_kv(v)
+        for b, p in enumerate([2, 0, 7]):
+            np.testing.assert_array_equal(
+                np.asarray(cache.v_q[0, b, p:p + 3]), np.asarray(v_q[b]))
+
+
+class TestLatentCache:
+    def test_heterogeneous_latent_append(self):
+        cache = KV.init_latent_cache(L, B, S, dim=6)
+        c = jax.random.normal(jax.random.key(7), (B, 1, 6))
+        pos = jnp.array([1, 9, 4], jnp.int32)
+        cache = KV.append_latent(cache, 1, c, pos)
+        got = (cache.c_q[1].astype(jnp.float32) * cache.c_s[1])
+        for b, p in enumerate([1, 9, 4]):
+            np.testing.assert_allclose(np.asarray(got[b, p]),
+                                       np.asarray(c[b, 0]),
+                                       rtol=0.05, atol=0.02)
+
+
+class TestCacheBytesInvariance:
+    def test_invariant_under_slot_churn(self):
+        """Allocation, ragged appends, frees, and re-allocation never change
+        the SLC footprint — slots are rows of a fixed pool, not allocations."""
+        cache = KV.init_cache(L, B, S, H, D)
+        baseline = KV.cache_bytes(cache)
+        rng = np.random.default_rng(0)
+        for step in range(30):
+            op = step % 3
+            if op == 0:
+                cache = KV.alloc_slot(cache, int(rng.integers(B)),
+                                      int(rng.integers(S // 2)))
+            elif op == 1:
+                k, v = _kv(step)
+                cache = KV.append_layer(
+                    cache, int(rng.integers(L)), k, v,
+                    jnp.minimum(cache.lengths, S - 1))
+            else:
+                cache = KV.free_slot(cache, int(rng.integers(B)))
+            assert KV.cache_bytes(cache) == baseline
+
+    def test_property_hypothesis(self):
+        pytest.importorskip("hypothesis", reason="property tests need "
+                            "hypothesis (pip install .[test])")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(deadline=None, max_examples=25)
+        @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, B - 1),
+                                  st.integers(0, S - 1)), max_size=12))
+        def prop(ops):
+            cache = KV.init_cache(1, B, S, H, D)
+            base = KV.cache_bytes(cache)
+            for op, slot, n in ops:
+                if op == 0:
+                    cache = KV.alloc_slot(cache, slot, n)
+                elif op == 1:
+                    cache = KV.free_slot(cache, slot)
+                else:
+                    k, v = _kv(n)
+                    cache = KV.append_layer(cache, 0, k, v, cache.lengths)
+                assert KV.cache_bytes(cache) == base
+                assert cache.k_q.shape == (1, B, S, H, D)
+
+        prop()

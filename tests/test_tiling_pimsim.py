@@ -141,6 +141,8 @@ class TestTilingProperties:
         reduce both topologies to PIM-bound with the tree's traversal on top
         — the reason the paper sizes the tree per 64-plane die."""
         import math
+        pytest.importorskip("hypothesis", reason="property tests need "
+                            "hypothesis (pip install .[test])")
         from hypothesis import given, settings, strategies as st
         from repro.core import htree
         from repro.core.pim.params import SIZE_A
