@@ -9,7 +9,7 @@ Per (arch x shape) on the single-pod 16x16 mesh:
 ``compiled.cost_analysis()`` is *per-device* (calibrated in
 tests/EXPERIMENTS.md), so the division by chips is already done.
 Collective bytes are summed from the partitioned HLO's collective ops
-(per-device payloads).  MODEL_FLOPS follows DESIGN.md Sec. 8.
+(per-device payloads).  MODEL_FLOPS follows DESIGN.md Sec. 7.
 """
 from __future__ import annotations
 

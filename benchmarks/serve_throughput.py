@@ -6,11 +6,16 @@ reports decode throughput plus per-request latency percentiles — the
 throughput/latency axis the ROADMAP's serving scenarios build on.
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
-          [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4]
+          [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4] \
+          [--mesh 2x4] [--json BENCH_serve_throughput.json]
+
+``--json`` writes the summary record CI uploads as a workflow artifact
+(the ``BENCH_*.json`` perf trajectory).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -48,13 +53,19 @@ def main():
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help='serve over a (data, model) mesh, e.g. "2x4"')
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
     args = ap.parse_args()
 
+    from repro.launch.serve import make_serve_runtime
     cfg = registry.get(args.arch).reduced()
     params = M.init_params(jax.random.key(0), cfg)
     max_len = args.max_prompt + args.max_new + 1
     eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
-                                   max_len=max_len)
+                                   max_len=max_len,
+                                   rt=make_serve_runtime(args.mesh))
 
     rng = np.random.default_rng(args.seed)
     arrivals, prompts, budgets = build_trace(
@@ -62,8 +73,14 @@ def main():
     prompts = [(p % cfg.vocab_size).tolist() for p in prompts]
 
     # warm the compile caches (budget 2 so the batched decode step compiles
-    # too, not just prefill) so the measured run is steady-state serving
-    eng.generate_all([prompts[0]], [2])
+    # too, not just prefill) so the measured run is steady-state serving;
+    # one prompt per reachable prefill bucket keeps mid-trace compiles out
+    # of the measured p99/TTFT
+    b = eng.prefill_bucket
+    warm_lens = sorted({min(n, args.max_prompt)
+                        for n in range(b, args.max_prompt + b, b)})
+    warm = [list(range(max(1, n))) for n in warm_lens]
+    eng.generate_all(warm, [2] * len(warm))
 
     reqs = []
     eng.reset_clock()
@@ -92,6 +109,19 @@ def main():
           f"p99 {percentile(lat, 0.99)*1e3:7.1f} ms")
     print(f"TTFT     p50 {percentile(ttft, 0.50)*1e3:7.1f} ms   "
           f"p99 {percentile(ttft, 0.99)*1e3:7.1f} ms")
+    if args.json:
+        rec = {"bench": "serve_throughput", "arch": cfg.name,
+               "slots": args.slots, "requests": args.requests,
+               "rate_req_s": args.rate, "mesh": args.mesh,
+               "seed": args.seed, "wall_s": wall, "generated_tokens": gen,
+               "throughput_tok_s": gen / wall,
+               "latency_p50_ms": percentile(lat, 0.50) * 1e3,
+               "latency_p99_ms": percentile(lat, 0.99) * 1e3,
+               "ttft_p50_ms": percentile(ttft, 0.50) * 1e3,
+               "ttft_p99_ms": percentile(ttft, 0.99) * 1e3}
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", args.json)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,17 @@ from repro.core.pim import latency as lmod
 from repro.core.pim.params import PlaneConfig
 
 
+def tree_depth(leaves: int) -> int:
+    """Levels of a binary reduction tree over ``leaves`` nodes.
+
+    Shared ruler between the analytical die model (``htree_time`` charges
+    ``depth * level_lat``) and the SPMD collective
+    (``repro.dist.collectives.htree_allreduce`` issues ``depth`` up-sweep
+    rounds) so the two never drift apart.
+    """
+    return max(1, math.ceil(math.log2(max(1, leaves))))
+
+
 @dataclasses.dataclass(frozen=True)
 class MvmTiming:
     t_in: float          # inbound I/O (input vector broadcast)
@@ -79,7 +90,7 @@ def htree_time(m: int, n: int, planes: int, cfg: PlaneConfig,
     r_tiles, c_tiles = _tiles(m, n, cfg)
     ops = r_tiles * c_tiles
     waves = math.ceil(ops / planes)
-    depth = max(1, math.ceil(math.log2(planes)))
+    depth = tree_depth(planes)
     # per-level streaming latency of one tile vector through an RPU
     level_lat = cfg.tile_cols / P.RPU_MACS_PER_CYCLE / P.RPU_CLOCK_HZ
     return MvmTiming(

@@ -1,0 +1,36 @@
+"""jax API compatibility shims for the dist layer.
+
+The repo pins no jax version; CI runs whatever ``jax[cpu]`` resolves to.
+Two surfaces moved across releases:
+
+* ``shard_map`` — ``jax.experimental.shard_map.shard_map`` on 0.4.x,
+  promoted to ``jax.shard_map`` (with ``check_vma`` replacing
+  ``check_rep``) later.
+* static axis size inside a ``shard_map``/``pmap`` body —
+  ``jax.lax.axis_size`` only exists on newer jax; the portable spelling is
+  ``psum(1, axis)``, which constant-folds to a Python int.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, on either jax API."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # same entry point, older kwarg
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, from inside the mapped body."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -7,9 +7,15 @@ meshes, recording memory_analysis / cost_analysis / collective bytes.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+    PYTHONPATH=src python -m repro.launch.dryrun --quick
 
 Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json — consumed by
 benchmarks/roofline.py and EXPERIMENTS.md.
+
+``--quick`` compiles reduced configs on a small 2x4 mesh and writes the same
+record schema (tag ``quick2x4``) plus ``quick_manifest.json``, so CI can
+exercise the artifact schema checks in ``tests/test_distributed.py`` without
+the multi-hour full sweep.
 """
 import argparse
 import json
@@ -149,15 +155,31 @@ def _logits_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh):
     return NamedSharding(mesh, P(b, v))
 
 
+# --quick: reduced configs, CI-sized shapes, a 2x4 slice of the local devices
+QUICK_ARCHS = ["llama3-8b", "grok-1-314b", "mamba2-2.7b"]
+QUICK_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 512, 8, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 512, 4, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 512, 8, "decode"),
+    "long_500k": ShapeConfig("long_500k", 8_192, 1, "decode"),
+}
+
+
+def make_quick_mesh():
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(2, 4)
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
-             variant: str = "baseline") -> dict:
-    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+             variant: str = "baseline", quick: bool = False) -> dict:
+    mesh_tag = ("quick2x4" if quick
+                else "pod2x16x16" if multi_pod else "pod16x16")
     suffix = "" if variant == "baseline" else f"__{variant}"
     out_path = ART / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
-    cfg = registry.get(arch)
-    shape = SHAPES[shape_name]
+    cfg = registry.get(arch).reduced() if quick else registry.get(arch)
+    shape = (QUICK_SHAPES if quick else SHAPES)[shape_name]
     ok, why = applicable(cfg, shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "variant": variant,
@@ -169,7 +191,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
         _save(out_path, rec)
         return rec
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh = make_quick_mesh() if quick else make_production_mesh(
+            multi_pod=multi_pod)
         fn, args, in_sh, out_sh = build_step(cfg, shape, mesh, variant)
         t0 = time.time()
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
@@ -190,6 +213,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
             mem_rec = {"error": str(e)}
         try:
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):   # older jax: list per device
+                cost = cost[0] if cost else {}
             cost_rec = {k: float(v) for k, v in cost.items()
                         if isinstance(v, (int, float)) and k in
                         ("flops", "bytes accessed", "transcendentals",
@@ -221,6 +246,27 @@ def _save(path: Path, rec: dict):
     path.write_text(json.dumps(rec, indent=1))
 
 
+def run_quick(force: bool = False) -> list[dict]:
+    """CI-sized sweep: reduced configs x QUICK_SHAPES on the 2x4 mesh, plus
+    a manifest the artifact schema tests key off."""
+    recs, names = [], []
+    for arch in QUICK_ARCHS:
+        for sname in QUICK_SHAPES:
+            t0 = time.time()
+            rec = run_cell(arch, sname, False, force=force, quick=True)
+            recs.append(rec)
+            names.append(f"{arch}__{sname}__quick2x4.json")
+            extra = (f"compile={rec.get('compile_s')}s"
+                     if rec.get("status") == "ok"
+                     else rec.get("reason", rec.get("error", ""))[:120])
+            print(f"[{time.strftime('%H:%M:%S')}] {arch} x {sname} x quick2x4:"
+                  f" {rec.get('status')} ({extra}) [{time.time()-t0:.0f}s]",
+                  flush=True)
+    _save(ART / "quick_manifest.json",
+          {"mesh": "quick2x4", "artifacts": names})
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -229,8 +275,15 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced configs on a 2x4 mesh (CI schema artifacts)")
     ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
     args = ap.parse_args()
+
+    if args.quick:
+        recs = run_quick(force=args.force)
+        bad = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+        raise SystemExit(1 if bad else 0)
 
     cells = []
     if args.all:

@@ -15,3 +15,16 @@ def make_host_mesh():
     """Whatever devices exist locally, as a (1, n) (data, model) mesh."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_local_mesh(d: int, m: int):
+    """A (data, model) mesh over the first d*m local devices (serve --mesh,
+    dryrun --quick; on CPU force host devices via XLA_FLAGS first)."""
+    import numpy as np
+    devs = jax.devices()
+    if d * m > len(devs):
+        raise ValueError(
+            f"mesh {d}x{m} needs {d * m} devices, have {len(devs)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(np.asarray(devs[: d * m]).reshape(d, m),
+                             ("data", "model"))

@@ -10,6 +10,14 @@ scheduler, with queueing and mid-flight backfill):
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --reduced \
         --continuous --requests 12 --slots 4 --steps 32
+
+Either mode accepts ``--mesh DxM`` to serve over a (data, model) device
+mesh (slot pool over data axes, experts/FFN over model; see
+``dist/sharding.py``).  On a CPU box, force host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --arch grok-1-314b \
+        --reduced --continuous --mesh 2x4
 """
 from __future__ import annotations
 
@@ -20,13 +28,28 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
+from repro.models.transformer import Runtime
 from repro.serve.engine import ContinuousBatchingEngine, Engine
+
+
+def make_serve_runtime(spec: str | None) -> Runtime:
+    """``--mesh DxM`` -> a serve Runtime over the first DxM local devices."""
+    if not spec:
+        return Runtime()
+    d, m = (int(s) for s in spec.lower().split("x"))
+    try:
+        mesh = make_local_mesh(d, m)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    return Runtime(mesh=mesh, data_axes=("data",), serve_resident_moe=True)
 
 
 def _run_fixed(cfg, params, args):
     eng = Engine(cfg=cfg, params=params,
                  max_len=args.prompt_len + args.steps + 1,
+                 rt=make_serve_runtime(args.mesh),
                  quantize=not args.no_quantize)
     key = jax.random.key(1)
     if cfg.family == "encdec":
@@ -51,6 +74,7 @@ def _run_continuous(cfg, params, args):
     max_len = args.prompt_len + args.steps + 1
     eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
                                    max_len=max_len,
+                                   rt=make_serve_runtime(args.mesh),
                                    quantize=not args.no_quantize)
     prompts = [rng.integers(0, cfg.vocab_size,
                             rng.integers(4, args.prompt_len + 1)).tolist()
@@ -84,6 +108,8 @@ def main():
                     help="serve a ragged request stream via the slot scheduler")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help='serve over a (data, model) mesh, e.g. "2x4"')
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)

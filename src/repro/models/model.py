@@ -64,7 +64,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# MODEL_FLOPS (Sec. Roofline conventions, DESIGN.md Sec. 8)
+# MODEL_FLOPS (Sec. Roofline conventions, DESIGN.md Sec. 7)
 # ---------------------------------------------------------------------------
 def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     n_active = cfg.active_param_count()

@@ -176,13 +176,8 @@ def _moe_block(p: Params, x: jax.Array, cfg: ModelConfig, rt: Runtime):
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    try:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # older API name
-        from jax.experimental.shard_map import shard_map as _sm
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
+    from repro.dist.compat import shard_map
+    return shard_map(f, mesh, in_specs, out_specs)
 
 
 def apply_layer_train(p: Params, cfg: ModelConfig, slot: int, x, positions,

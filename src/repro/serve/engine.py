@@ -25,11 +25,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.transformer import Runtime
 from repro.serve.quantize import quantize_tree
 from repro.serve.scheduler import Request, RequestState, Scheduler
+
+
+def _place_on_mesh(cfg: ModelConfig, params: Any, qparams: Any, rt: Runtime):
+    """Land the float (prefill) and QLC (decode) param trees on ``rt.mesh``
+    per ``dist.sharding``; returns (params, qparams, qparam_shardings)."""
+    from repro.dist import sharding as SH
+    mesh = rt.mesh
+    params = jax.device_put(params, SH.param_shardings(
+        cfg, jax.eval_shape(lambda: params), mesh))
+    qsh = SH.param_shardings(cfg, jax.eval_shape(lambda: qparams), mesh,
+                             serve=rt.serve_resident_moe)
+    return params, jax.device_put(qparams, qsh), qsh
 
 
 @dataclasses.dataclass
@@ -42,6 +55,9 @@ class Engine:
 
     def __post_init__(self):
         self.qparams = quantize_tree(self.params) if self.quantize else self.params
+        if self.rt.mesh is not None:
+            self.params, self.qparams, _ = _place_on_mesh(
+                self.cfg, self.params, self.qparams, self.rt)
         rt_decode = dataclasses.replace(self.rt)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, self.cfg, b, self.max_len, self.rt))
@@ -92,6 +108,16 @@ class ContinuousBatchingEngine:
     per-request length masking in :func:`repro.models.transformer.prefill`.
     SSM/hybrid stacks prefill at exact prompt length (their recurrent state
     would integrate padding), paying one compile per distinct length.
+
+    Passing a ``Runtime`` with a mesh turns on the sharded-serve path:
+    params and quantized "QLC" weights land on the mesh per
+    ``dist.sharding.param_shardings`` (experts resident per
+    ``moe_serve_strategy`` when ``rt.serve_resident_moe``), and the pooled
+    decode state — the slot-pool SLC cache — shards its slot axis over the
+    data axes with KV heads over ``model``.  The jitted decode step pins
+    those shardings so slot churn (``write_slot`` admissions) never
+    migrates the pool.  Scheduling stays host-side and identical to the
+    single-device engine, so outputs are token-for-token reproducible.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int = 4,
@@ -117,9 +143,35 @@ class ContinuousBatchingEngine:
 
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len, self.rt))
+        if self.rt.mesh is None:
+            self._decode = jax.jit(
+                lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
+            self._write = jax.jit(T.write_slot)
+        else:
+            self._shard_over_mesh()
+
+    # -- sharded-serve path -----------------------------------------------
+    def _shard_over_mesh(self) -> None:
+        """Place params, QLC weights and the slot pool on ``rt.mesh`` and
+        pin the decode step's in/out shardings to the pool layout."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import sharding as SH
+        cfg, mesh = self.cfg, self.rt.mesh
+        self.params, self.qparams, qsh = _place_on_mesh(
+            cfg, self.params, self.qparams, self.rt)
+        pool_shape = ShapeConfig("serve", self.max_len, self.n_slots, "decode")
+        ssh = SH.decode_state_shardings(
+            cfg, pool_shape, jax.eval_shape(lambda: self.state), mesh)
+        self.state = jax.device_put(self.state, ssh)
+        b = SH.batch_entry(self.n_slots, mesh)
+        tok_sh = NamedSharding(mesh, P(b))
+        logits_sh = NamedSharding(mesh, P(b, None))
         self._decode = jax.jit(
-            lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
-        self._write = jax.jit(T.write_slot)
+            lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
+            in_shardings=(qsh, ssh, tok_sh), out_shardings=(logits_sh, ssh))
+        # admissions write a replicated B=1 row into the sharded pool; the
+        # out_shardings pin keeps the pool resident (no migration per admit)
+        self._write = jax.jit(T.write_slot, out_shardings=ssh)
 
     # -- request intake ---------------------------------------------------
     def submit(self, prompt: Iterable[int], max_new_tokens: int,

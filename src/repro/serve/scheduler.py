@@ -85,6 +85,9 @@ class Scheduler:
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.prompt_len < 1:
+            raise ValueError(
+                f"request {req.rid}: empty prompt (prefill needs >= 1 token)")
         if req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1 "

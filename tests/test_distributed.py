@@ -11,6 +11,7 @@ import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 ART = ROOT / "artifacts" / "dryrun"
+MANIFEST = ART / "quick_manifest.json"
 
 
 def _run_with_devices(n: int, code: str) -> str:
@@ -29,16 +30,15 @@ class TestCollectives:
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P
             from repro.dist.collectives import htree_allreduce
+            from repro.dist.compat import shard_map
             mesh = jax.make_mesh((8,), ("model",))
             x = jnp.arange(32.0).reshape(8, 4)
             def f(x):
                 return htree_allreduce(x, "model")
             def g(x):
                 return jax.lax.psum(x, "model")
-            a = jax.shard_map(f, mesh=mesh, in_specs=P("model", None),
-                              out_specs=P("model", None))(x)
-            b = jax.shard_map(g, mesh=mesh, in_specs=P("model", None),
-                              out_specs=P("model", None))(x)
+            a = shard_map(f, mesh, P("model", None), P("model", None))(x)
+            b = shard_map(g, mesh, P("model", None), P("model", None))(x)
             import numpy as np
             np.testing.assert_allclose(np.asarray(a), np.asarray(b))
             print("HTREE_OK")
@@ -100,29 +100,103 @@ class TestCollectives:
         assert "TRAIN_MATCH_OK" in out
 
 
-@pytest.mark.skipif(not ART.exists(), reason="dry-run artifacts not generated")
+class TestHtreeProperty:
+    """The tree all-reduce must equal psum off the 8-leaf happy path: ragged
+    axis sizes (non-power-of-two trees pad their last level) and odd
+    trailing shapes."""
+
+    @pytest.mark.parametrize("n", [3, 5, 6])
+    def test_ragged_axis_sizes(self, n):
+        out = _run_with_devices(n, f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.collectives import htree_allreduce
+            from repro.dist.compat import shard_map
+            n = {n}
+            mesh = jax.make_mesh((n,), ("model",))
+            for shape in [(n, 7), (n, 5, 3), (n, 1), (n, 2, 3, 5)]:
+                x = (jax.random.normal(jax.random.key(shape[-1]), shape)
+                     * 100.0).astype(jnp.float32)
+                spec = P(*("model",) + (None,) * (len(shape) - 1))
+                a = shard_map(lambda v: htree_allreduce(v, "model"),
+                              mesh, spec, spec)(x)
+                b = shard_map(lambda v: jax.lax.psum(v, "model"),
+                              mesh, spec, spec)(x)
+                # tree vs ring reassociation: equal up to fp32 ulps
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5)
+            print("HTREE_RAGGED_OK")
+        """)
+        assert "HTREE_RAGGED_OK" in out
+
+    def test_round_count_matches_latency_model(self):
+        """The collective must issue exactly tree_depth(n) up-sweep rounds
+        plus tree_depth(n) down-sweep rounds (one ppermute each) — the
+        round count core/htree.py charges as ``depth * level_lat``."""
+        out = _run_with_devices(8, """
+            import numpy as np
+            import jax, jax.numpy as jnp
+            from jax.sharding import Mesh, PartitionSpec as P
+            from repro.core.htree import tree_depth
+            from repro.dist.collectives import htree_allreduce
+            from repro.dist.compat import shard_map
+            for n in (2, 3, 5, 6, 8):
+                mesh = Mesh(np.asarray(jax.devices()[:n]), ("model",))
+                f = shard_map(lambda v: htree_allreduce(v, "model"),
+                              mesh, P("model"), P("model"))
+                jaxpr = str(jax.make_jaxpr(f)(jnp.zeros((n,))))
+                rounds = jaxpr.count("ppermute")
+                assert rounds == 2 * tree_depth(n), (n, rounds, jaxpr)
+            print("ROUNDS_OK")
+        """)
+        assert "ROUNDS_OK" in out
+
+
 class TestDryRunArtifacts:
+    """Schema checks over artifacts/dryrun records.  CI seeds them with
+    ``dryrun --quick`` (manifest present); a full ``--all --both-meshes``
+    sweep is validated against the production thresholds."""
+
+    def _records(self):
+        return [json.loads(p.read_text()) for p in ART.glob("*.json")
+                if p.name != MANIFEST.name]
+
     def test_all_cells_ok_or_documented_skip(self):
-        recs = [json.loads(p.read_text()) for p in ART.glob("*.json")]
-        assert len(recs) >= 80, "expected 40 cells x 2 meshes"
+        if not ART.exists():
+            pytest.skip("dry-run artifacts not generated "
+                        "(run: python -m repro.launch.dryrun --quick)")
+        recs = self._records()
+        if MANIFEST.exists():
+            manifest = json.loads(MANIFEST.read_text())
+            missing = [n for n in manifest["artifacts"]
+                       if not (ART / n).exists()]
+            assert not missing, missing
+            assert len(recs) >= len(manifest["artifacts"])
+        else:
+            assert len(recs) >= 80, "expected 40 cells x 2 meshes"
         bad = [r for r in recs if r["status"] not in ("ok", "skipped")]
         assert not bad, [(b["arch"], b["shape"], b.get("error")) for b in bad]
         skips = [r for r in recs if r["status"] == "skipped"]
         assert all("sub-quadratic" in r["reason"] for r in skips)
 
+    def test_ok_records_have_cost_and_collectives(self):
+        if not ART.exists():
+            pytest.skip("dry-run artifacts not generated")
+        ok = [r for r in self._records() if r["status"] == "ok"]
+        if not ok:
+            pytest.skip("no ok records")
+        for r in ok:
+            assert r["cost"]["flops"] > 0, (r["arch"], r["shape"])
+            assert "total" in r["collectives"], (r["arch"], r["shape"])
+            assert r["n_devices"] >= 8, (r["arch"], r["shape"])
+
     def test_multi_pod_coverage(self):
         recs = [json.loads(p.read_text()) for p in ART.glob("*pod2x16x16*.json")]
+        if not recs:
+            pytest.skip("multi-pod artifacts not generated (full sweep only)")
         ok = [r for r in recs if r["status"] == "ok"]
         assert len(ok) >= 32
         assert all(r["n_devices"] == 512 for r in ok)
-
-    def test_rooflines_have_cost_and_collectives(self):
-        for p in ART.glob("*pod16x16.json"):
-            r = json.loads(p.read_text())
-            if r["status"] != "ok":
-                continue
-            assert r["cost"]["flops"] > 0, p.name
-            assert "total" in r["collectives"], p.name
 
 
 @pytest.mark.skipif(not list(ART.glob("*__opt.json")), reason="variant artifacts absent")
@@ -178,3 +252,70 @@ class TestResidentMoE:
             print("RESIDENT_OK", strat)
         """)
         assert "RESIDENT_OK" in out
+
+    def test_resident_decode_shape_all_strategies(self):
+        """True decode tokens (T==1) through each resident layout, with both
+        combine collectives (ring psum and H-tree)."""
+        out = _run_with_devices(8, """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import moe as MoE
+            from repro.models.transformer import _moe_block, Runtime
+            from repro.dist import sharding as SH
+            cfg = ARCHS["grok-1-314b"].reduced()
+            p = MoE.moe_init(jax.random.key(0), cfg)
+            x = jax.random.normal(jax.random.key(2), (8, 1, cfg.d_model))
+            ref, _ = MoE.moe_apply(p, x, cfg, axis_name=None)
+            seen = set()
+            for mesh_shape in [(2, 4), (8, 1), (2, 2)]:
+                mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+                seen.add(SH.moe_serve_strategy(cfg, mesh))
+                for coll in ("psum", "htree"):
+                    rt = Runtime(mesh=mesh, data_axes=("data",),
+                                 serve_resident_moe=True, collective=coll)
+                    got, _ = jax.jit(
+                        lambda pp, xx: _moe_block(pp, xx, cfg, rt))(p, x)
+                    np.testing.assert_allclose(np.asarray(got),
+                                               np.asarray(ref),
+                                               rtol=2e-3, atol=2e-4)
+            assert seen == {"ep_data", "etp2", "ep2"}, seen
+            print("RESIDENT_T1_OK", sorted(seen))
+        """)
+        assert "RESIDENT_T1_OK" in out
+
+
+class TestShardedServe:
+    """The mesh-sharded continuous-batching engine must reproduce the
+    single-device engine token-for-token on a ragged multi-request batch
+    (scheduling is host-side and identical; only tensor placement moves)."""
+
+    def test_sharded_engine_token_identical(self):
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            # dense quantized (W8A8 decode) + MoE float (resident experts)
+            for arch, quantize in (("llama3-8b", True),
+                                   ("grok-1-314b", False)):
+                cfg = ARCHS[arch].reduced()
+                params = M.init_params(jax.random.key(0), cfg)
+                rng = np.random.default_rng(7)
+                prompts = [rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 17)).tolist()
+                           for _ in range(10)]
+                budgets = [int(rng.integers(2, 12)) for _ in range(10)]
+                ref = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=48,
+                    quantize=quantize).generate_all(prompts, budgets)
+                mesh = jax.make_mesh((2, 4), ("data", "model"))
+                rt = Runtime(mesh=mesh, data_axes=("data",),
+                             serve_resident_moe=True)
+                got = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=48, quantize=quantize,
+                    rt=rt).generate_all(prompts, budgets)
+                assert got == ref, (arch, got, ref)
+                print("PARITY_OK", arch)
+        """)
+        assert out.count("PARITY_OK") == 2
