@@ -1,16 +1,25 @@
-"""Continuous-batching serve benchmark: Poisson arrivals, ragged prompts.
+"""Continuous-batching serve benchmark: Poisson arrivals, ragged prompts,
+per-policy latency breakdown.
 
 Drives the slot-scheduled engine with a synthetic open-loop trace (requests
 arrive at Poisson times, with random prompt lengths and token budgets) and
-reports decode throughput plus per-request latency percentiles — the
-throughput/latency axis the ROADMAP's serving scenarios build on.
+reports, per scheduling policy: decode throughput, request latency, TTFT,
+TPOT, queue delay (admit - arrival) percentiles, preemption count, and the
+largest number of prefill tokens any single engine iteration absorbed
+(``max_pf/step``) — the stall metric.  With ``--chunk`` the engine runs
+chunked prefill, so ``max_pf/step`` is bounded by the iteration token
+budget instead of the longest prompt: no decode iteration ever stalls
+behind a full-prompt prefill.
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
           [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4] \
-          [--mesh 2x4] [--json BENCH_serve_throughput.json]
+          [--policies fifo,sjf,priority,fair] [--chunk 8] \
+          [--max-step-tokens 12] [--mesh 2x4] \
+          [--json BENCH_serve_throughput.json]
 
 ``--json`` writes the summary record CI uploads as a workflow artifact
-(the ``BENCH_*.json`` perf trajectory).
+(the ``BENCH_*.json`` perf trajectory): one record per policy under
+``"policies"`` plus the trace parameters at the top level.
 """
 from __future__ import annotations
 
@@ -26,14 +35,18 @@ from repro.models import model as M
 from repro.serve.engine import ContinuousBatchingEngine
 
 
-def build_trace(rng, n, rate, max_prompt, max_new):
-    """Poisson process: exponential inter-arrival gaps at ``rate`` req/s."""
+def build_trace(rng, n, rate, max_prompt, max_new, n_users=4):
+    """Poisson process: exponential inter-arrival gaps at ``rate`` req/s.
+    Requests carry a priority class (0-3) and a user id so the priority and
+    fair-share policies actually have something to reorder/preempt on."""
     gaps = rng.exponential(1.0 / rate, size=n)
     arrivals = np.cumsum(gaps)
     prompts = [rng.integers(0, 2**30, size=rng.integers(4, max_prompt + 1))
                for _ in range(n)]
     budgets = rng.integers(max(1, max_new // 2), max_new + 1, size=n)
-    return arrivals, prompts, budgets
+    priorities = rng.integers(0, 4, size=n)
+    users = [f"u{u}" for u in rng.integers(0, n_users, size=n)]
+    return arrivals, prompts, budgets, priorities, users
 
 
 def percentile(sorted_vals, q):
@@ -41,6 +54,93 @@ def percentile(sorted_vals, q):
         return float("nan")
     i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
     return sorted_vals[i]
+
+
+def make_engine(cfg, params, args, rt):
+    max_len = args.max_prompt + args.max_new + 1
+    return ContinuousBatchingEngine(
+        cfg, params, n_slots=args.slots, max_len=max_len, rt=rt,
+        policy=args.policy, chunk=args.chunk,
+        max_step_tokens=args.max_step_tokens)
+
+
+def warm_engine(eng, args):
+    """Warm the compile caches (budget 2 so the batched decode step compiles
+    too, not just prefill) so the measured run is steady-state serving.
+    Unchunked: one prompt per reachable prefill bucket; chunked: full and
+    ragged chunks plus finalize."""
+    if eng.chunk:
+        warm_lens = sorted({min(args.max_prompt, eng.chunk),
+                            min(args.max_prompt, eng.chunk + 1)})
+    else:
+        b = eng.prefill_bucket
+        warm_lens = sorted({min(n, args.max_prompt)
+                            for n in range(b, args.max_prompt + b, b)})
+    warm = [list(range(1, max(2, n + 1))) for n in warm_lens]
+    eng.generate_all(warm, [2] * len(warm))
+    for k in eng.stats:
+        eng.stats[k] = 0
+
+
+def replay_trace(eng, arrivals, prompts, budgets, priorities, users):
+    """Open-loop replay: submit at trace time, step until drained."""
+    reqs = []
+    eng.reset_clock()
+    t0 = time.perf_counter()
+    next_i = 0
+    while next_i < len(prompts) or eng.scheduler.has_work():
+        now = time.perf_counter() - t0
+        while next_i < len(prompts) and arrivals[next_i] <= now:
+            reqs.append(eng.submit(prompts[next_i], int(budgets[next_i]),
+                                   arrival_time=float(arrivals[next_i]),
+                                   priority=int(priorities[next_i]),
+                                   user=users[next_i]))
+            next_i += 1
+        if not eng.step() and next_i < len(prompts):
+            # idle: nothing resident yet, next arrival still in the future
+            time.sleep(min(0.001, max(0.0, arrivals[next_i] - now)))
+    wall = time.perf_counter() - t0
+    return reqs, wall
+
+
+def summarize(policy, eng, reqs, wall):
+    # a request whose admission raised finishes with .error set and no
+    # timing marks — keep it out of the percentiles, report the count
+    failed = [r for r in reqs if r.error is not None]
+    done = [r for r in reqs if r.error is None]
+    gen = sum(len(r.output) for r in done)
+    lat = sorted(r.finish_time - r.arrival_time for r in done)
+    ttft = sorted(r.first_token_time - r.arrival_time for r in done)
+    qdelay = sorted(r.admit_time - r.arrival_time for r in done)
+    tpot = sorted((r.finish_time - r.first_token_time) / (len(r.output) - 1)
+                  for r in done if len(r.output) > 1)
+    return {
+        "policy": policy,
+        "failed": len(failed),
+        "wall_s": wall, "generated_tokens": gen,
+        "throughput_tok_s": gen / wall,
+        "latency_p50_ms": percentile(lat, 0.50) * 1e3,
+        "latency_p99_ms": percentile(lat, 0.99) * 1e3,
+        "ttft_p50_ms": percentile(ttft, 0.50) * 1e3,
+        "ttft_p99_ms": percentile(ttft, 0.99) * 1e3,
+        "tpot_p50_ms": percentile(tpot, 0.50) * 1e3,
+        "tpot_p99_ms": percentile(tpot, 0.99) * 1e3,
+        "queue_delay_p50_ms": percentile(qdelay, 0.50) * 1e3,
+        "queue_delay_p99_ms": percentile(qdelay, 0.99) * 1e3,
+        "preemptions": eng.stats["preemptions"],
+        "steps": eng.stats["steps"],
+        "max_step_prefill_tokens": eng.stats["max_step_prefill_tokens"],
+    }
+
+
+COLS = [("policy", "%-16s"), ("throughput_tok_s", "%8.1f"),
+        ("ttft_p50_ms", "%9.1f"), ("ttft_p99_ms", "%9.1f"),
+        ("tpot_p50_ms", "%9.2f"), ("tpot_p99_ms", "%9.2f"),
+        ("latency_p99_ms", "%9.1f"), ("queue_delay_p50_ms", "%9.1f"),
+        ("queue_delay_p99_ms", "%9.1f"), ("preemptions", "%5d"),
+        ("max_step_prefill_tokens", "%11d")]
+HEAD = ("policy             tok/s  ttft-p50  ttft-p99  tpot-p50  tpot-p99  "
+        " lat-p99  qdel-p50  qdel-p99  prmpt  max_pf/step")
 
 
 def main():
@@ -53,6 +153,13 @@ def main():
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", default="fifo",
+                    help='comma list of policies (or "all"), e.g. '
+                         '"fifo,sjf,priority,fair:8"')
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="chunked prefill size (None = atomic prefills)")
+    ap.add_argument("--max-step-tokens", type=int, default=None,
+                    help="per-iteration token budget (default slots + chunk)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -62,65 +169,43 @@ def main():
     from repro.launch.serve import make_serve_runtime
     cfg = registry.get(args.arch).reduced()
     params = M.init_params(jax.random.key(0), cfg)
-    max_len = args.max_prompt + args.max_new + 1
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
-                                   max_len=max_len,
-                                   rt=make_serve_runtime(args.mesh))
+    rt = make_serve_runtime(args.mesh)
 
     rng = np.random.default_rng(args.seed)
-    arrivals, prompts, budgets = build_trace(
+    arrivals, prompts, budgets, priorities, users = build_trace(
         rng, args.requests, args.rate, args.max_prompt, args.max_new)
     prompts = [(p % cfg.vocab_size).tolist() for p in prompts]
 
-    # warm the compile caches (budget 2 so the batched decode step compiles
-    # too, not just prefill) so the measured run is steady-state serving;
-    # one prompt per reachable prefill bucket keeps mid-trace compiles out
-    # of the measured p99/TTFT
-    b = eng.prefill_bucket
-    warm_lens = sorted({min(n, args.max_prompt)
-                        for n in range(b, args.max_prompt + b, b)})
-    warm = [list(range(max(1, n))) for n in warm_lens]
-    eng.generate_all(warm, [2] * len(warm))
-
-    reqs = []
-    eng.reset_clock()
-    t0 = time.perf_counter()
-    next_i = 0
-    while next_i < len(prompts) or eng.scheduler.has_work():
-        now = time.perf_counter() - t0
-        while next_i < len(prompts) and arrivals[next_i] <= now:
-            reqs.append(eng.submit(prompts[next_i], int(budgets[next_i]),
-                                   arrival_time=float(arrivals[next_i])))
-            next_i += 1
-        if not eng.step() and next_i < len(prompts):
-            # idle: nothing resident yet, next arrival still in the future
-            time.sleep(min(0.001, max(0.0, arrivals[next_i] - now)))
-    wall = time.perf_counter() - t0
-
-    gen = sum(len(r.output) for r in reqs)
-    lat = sorted(r.finish_time - r.arrival_time for r in reqs)
-    ttft = sorted(r.first_token_time - r.arrival_time for r in reqs)
+    # "all" exercises the preemptive variants with a quantum the trace's
+    # token budgets can actually reach
+    policies = (["fifo", "sjf", "priority:preempt",
+                 f"fair:{max(1, args.max_new // 2)}"]
+                if args.policies == "all" else args.policies.split(","))
     print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
           f"rate={args.rate}/s prompts 4..{args.max_prompt} "
-          f"new {max(1, args.max_new//2)}..{args.max_new}")
-    print(f"wall {wall:.2f}s | generated {gen} tokens | "
-          f"throughput {gen / wall:.1f} tok/s")
-    print(f"latency  p50 {percentile(lat, 0.50)*1e3:7.1f} ms   "
-          f"p99 {percentile(lat, 0.99)*1e3:7.1f} ms")
-    print(f"TTFT     p50 {percentile(ttft, 0.50)*1e3:7.1f} ms   "
-          f"p99 {percentile(ttft, 0.99)*1e3:7.1f} ms")
+          f"new {max(1, args.max_new//2)}..{args.max_new} "
+          f"chunk={args.chunk} budget={args.max_step_tokens}")
+    print(HEAD)
+    records = {}
+    for pol in policies:
+        args.policy = pol
+        eng = make_engine(cfg, params, args, rt)
+        warm_engine(eng, args)
+        reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
+                                  priorities, users)
+        rec = summarize(pol, eng, reqs, wall)
+        records[pol] = rec
+        print("  ".join(fmt % rec[k] for k, fmt in COLS))
+
     if args.json:
-        rec = {"bench": "serve_throughput", "arch": cfg.name,
+        out = {"bench": "serve_throughput", "arch": cfg.name,
                "slots": args.slots, "requests": args.requests,
                "rate_req_s": args.rate, "mesh": args.mesh,
-               "seed": args.seed, "wall_s": wall, "generated_tokens": gen,
-               "throughput_tok_s": gen / wall,
-               "latency_p50_ms": percentile(lat, 0.50) * 1e3,
-               "latency_p99_ms": percentile(lat, 0.99) * 1e3,
-               "ttft_p50_ms": percentile(ttft, 0.50) * 1e3,
-               "ttft_p99_ms": percentile(ttft, 0.99) * 1e3}
+               "seed": args.seed, "chunk": args.chunk,
+               "max_step_tokens": args.max_step_tokens,
+               "policies": records}
         with open(args.json, "w") as f:
-            json.dump(rec, f, indent=1)
+            json.dump(out, f, indent=1)
         print("wrote", args.json)
 
 

@@ -56,6 +56,37 @@ def batched_update(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     return jax.vmap(one)(buf, new, pos)
 
 
+def chunk_update(buf: jax.Array, new: jax.Array, start: jax.Array | int,
+                 ) -> jax.Array:
+    """Append a ``[B, C, ...]`` chunk into ``buf`` (``[B, S, ...]``) at the
+    *shared* sequence offset ``start`` — the chunked-prefill SLC append: one
+    contiguous multi-token write into a slot row at an arbitrary cursor,
+    where :func:`batched_update` is its per-slot-offset decode sibling.
+
+    ``start`` may be a traced scalar, so one compiled chunk step serves
+    every cursor position.
+    """
+    start = jnp.asarray(start, jnp.int32)
+    idx = (jnp.int32(0), start) + (jnp.int32(0),) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), idx)
+
+
+def append_layer_chunk(cache: "KVCache", layer: int, k: jax.Array,
+                       v: jax.Array, start: jax.Array | int) -> "KVCache":
+    """Chunked-prefill append of ``[B, C, H_kv, D_h]`` float k/v into one
+    layer of the slotted cache at sequence offset ``start`` (quantized on
+    the way in, like :func:`append_layer`)."""
+    k_q, k_s = quantize_kv(k)
+    v_q, v_s = quantize_kv(v)
+    return dataclasses.replace(
+        cache,
+        k_q=cache.k_q.at[layer].set(chunk_update(cache.k_q[layer], k_q, start)),
+        k_s=cache.k_s.at[layer].set(chunk_update(cache.k_s[layer], k_s, start)),
+        v_q=cache.v_q.at[layer].set(chunk_update(cache.v_q[layer], v_q, start)),
+        v_s=cache.v_s.at[layer].set(chunk_update(cache.v_s[layer], v_s, start)),
+    )
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class KVCache:

@@ -288,6 +288,31 @@ def param_shardings(cfg: ModelConfig, params_abs: Any, mesh,
 # ---------------------------------------------------------------------------
 # decode state
 # ---------------------------------------------------------------------------
+def prefill_carry_shardings(cfg: ModelConfig, carry_abs: Any, mesh):
+    """Chunked-prefill carry (B=1 float K/V + cursor): the chunk batch is a
+    single request, so nothing shards over the data axes — leaves replicate
+    there — while attention heads (dim 3 of the 5-dim ``[n_p, 1, S_buf, H,
+    D]`` buffers) shard over ``model`` when they tile it, mirroring the
+    slot pool's head sharding so the finalize -> ``write_slot`` handoff
+    never reshards.  ``pos`` and low-rank (MLA latent) leaves replicate."""
+
+    def leaf_sharding(path_keys, x):
+        if "pos" in path_keys or x.ndim < 5:
+            return replicated(mesh)
+        entries = [None] * x.ndim
+        entries[3] = _fit(mesh, x.shape[3], MODEL_AXIS)
+        return NamedSharding(mesh, P(*entries))
+
+    def walk(node, path_keys):
+        if isinstance(node, dict):
+            return {k: walk(v, path_keys + [k]) for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(v, path_keys) for v in node)
+        return leaf_sharding(path_keys, node)
+
+    return walk(carry_abs, [])
+
+
 def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
                            state_abs: Any, mesh):
     """Slot-pool decode state: the batch/slot axis (dim 1 of every cache

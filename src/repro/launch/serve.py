@@ -11,6 +11,13 @@ scheduler, with queueing and mid-flight backfill):
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --reduced \
         --continuous --requests 12 --slots 4 --steps 32
 
+Chunked prefill + a scheduling policy (admissions never stall the decode
+pool; ``--max-step-tokens`` caps decode slots + prefill chunk tokens per
+iteration):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --continuous --chunk 8 --policy sjf --requests 16 --slots 4
+
 Either mode accepts ``--mesh DxM`` to serve over a (data, model) device
 mesh (slot pool over data axes, experts/FFN over model; see
 ``dist/sharding.py``).  On a CPU box, force host devices first:
@@ -75,24 +82,32 @@ def _run_continuous(cfg, params, args):
     eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
                                    max_len=max_len,
                                    rt=make_serve_runtime(args.mesh),
-                                   quantize=not args.no_quantize)
+                                   quantize=not args.no_quantize,
+                                   policy=args.policy, chunk=args.chunk,
+                                   max_step_tokens=args.max_step_tokens)
     prompts = [rng.integers(0, cfg.vocab_size,
                             rng.integers(4, args.prompt_len + 1)).tolist()
                for _ in range(args.requests)]
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
     t0 = time.perf_counter()
-    reqs = [eng.submit(p, m) for p, m in zip(prompts, budgets)]
+    reqs = [eng.submit(p, m, temperature=args.temperature, top_k=args.top_k)
+            for p, m in zip(prompts, budgets)]
     eng.drain()
     wall = time.perf_counter() - t0
     gen = sum(len(r.output) for r in reqs)
     lat = sorted(r.finish_time - r.arrival_time for r in reqs)
+    mode = f"chunk={eng.chunk} budget={eng.max_step_tokens}" if eng.chunk \
+        else "atomic prefill"
     print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
-          f"prompts 4..{args.prompt_len} budgets "
-          f"{args.steps//2}..{args.steps}")
+          f"policy={eng.policy.name} {mode} prompts 4..{args.prompt_len} "
+          f"budgets {args.steps//2}..{args.steps}")
     print(f"generated {gen} tokens in {wall:.2f}s -> {gen/wall:.1f} tok/s | "
           f"latency p50 {lat[len(lat)//2]*1e3:.0f} ms  "
           f"p99 {lat[min(len(lat)-1, int(0.99*len(lat)))]*1e3:.0f} ms")
+    print(f"steps={eng.stats['steps']} chunks={eng.stats['chunks']} "
+          f"preemptions={eng.stats['preemptions']} "
+          f"max prefill tokens/step={eng.stats['max_step_prefill_tokens']}")
     print("sample tokens:", reqs[0].output[:10])
 
 
@@ -108,6 +123,18 @@ def main():
                     help="serve a ragged request stream via the slot scheduler")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--policy", default="fifo",
+                    help='admission policy: fifo | priority[:preempt] | sjf '
+                         '| fair[:quantum] (e.g. "fair:8")')
+    ap.add_argument("--chunk", type=int, default=None, metavar="C",
+                    help="chunked prefill: consume prompts [1, C] tokens per "
+                         "engine iteration instead of one atomic prefill")
+    ap.add_argument("--max-step-tokens", type=int, default=None,
+                    help="per-iteration token budget (decode slots + prefill "
+                         "chunk tokens); default slots + chunk")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
     args = ap.parse_args()

@@ -142,6 +142,88 @@ def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: consume [B, C] tokens at an arbitrary cursor
+# ---------------------------------------------------------------------------
+def _rope_chunk(t: jax.Array, positions: jax.Array, theta: float, rt) -> jax.Array:
+    """RoPE for the chunked-prefill path: the partition-safe contraction
+    form under a mesh (rotate-half's split+concat mis-partitions deferred
+    partial sums — see :func:`layers.apply_rope_spmd`), the bit-exact
+    elementwise form on a single device."""
+    if rt is not None and rt.mesh is not None:
+        return L.apply_rope_spmd(t, positions, theta)
+    return L.apply_rope(t, positions, theta)
+
+
+def gqa_chunk(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              buf: dict, start: jax.Array, kv_lengths: jax.Array,
+              rt=None) -> tuple[jax.Array, dict]:
+    """One chunk of a chunked prefill.  ``x``: [B, C, d] hidden chunk whose
+    tokens sit at ``positions`` (= start + arange(C)); ``buf`` carries the
+    float K/V of the whole in-flight prompt ([B, S_buf, H_kv, D]).
+
+    The chunk's k/v append at offset ``start`` (:func:`KV.chunk_update`) and
+    q attends over the full resident prefix [0, kv_lengths) — full-precision
+    like one-shot prefill, so chunked == unchunked token-for-token.
+    ``start`` is traced: one compile serves every cursor.  Returns
+    (out, updated buf)."""
+    backend = rt.backend if rt is not None else "dense"
+    B, C, _ = x.shape
+    hd = cfg.head_dim
+    q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, C, cfg.n_heads, hd)
+    k = L.apply_linear(L._lin(p, "wk"), x, backend).reshape(B, C, cfg.n_kv_heads, hd)
+    v = L.apply_linear(L._lin(p, "wv"), x, backend).reshape(B, C, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q)
+        k = L.apply_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        q = _rope_chunk(q, positions, cfg.rope_theta, rt)
+        k = _rope_chunk(k, positions, cfg.rope_theta, rt)
+    k_buf = KV.chunk_update(buf["k"], k, start)
+    v_buf = KV.chunk_update(buf["v"], v, start)
+    o = flash_attention(q, k_buf.astype(q.dtype), v_buf.astype(q.dtype),
+                        q_offset=start, kv_lengths=kv_lengths)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, C, -1), backend)
+    return out, {"k": k_buf, "v": v_buf}
+
+
+def mla_chunk(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              buf: dict, start: jax.Array, kv_lengths: jax.Array,
+              rt=None) -> tuple[jax.Array, dict]:
+    """Chunked-prefill MLA: like :func:`mla_forward` but against carried
+    float K/V buffers; the compressed latent of the chunk is appended to
+    ``buf["lat"]`` so finalization can quantize it into the SLC cache."""
+    backend = rt.backend if rt is not None else "dense"
+    B, C, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
+    q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, C, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = _rope_chunk(q_rope, positions, cfg.rope_theta, rt)
+
+    kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
+    c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    c_kv = L.apply_norm(p["kv_norm"], c_kv)
+    k_rope = _rope_chunk(k_rope[:, :, None, :], positions, cfg.rope_theta, rt)
+    kv = L.apply_linear(L._lin(p, "wkv_b"), c_kv, backend).reshape(B, C, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, C, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    k_buf = KV.chunk_update(buf["k"], k, start)
+    v_buf = KV.chunk_update(buf["v"], v, start)
+    # the latent's two halves are carried separately and concatenated at
+    # finalize time: concatenating them here hits the same SPMD
+    # partial-sum mispartition as rotate-half (see _rope_chunk)
+    lat_c = KV.chunk_update(buf["lat_c"], c_kv, start)
+    lat_r = KV.chunk_update(buf["lat_r"], k_rope[:, :, 0, :], start)
+    o = flash_attention(qf, k_buf.astype(qf.dtype), v_buf.astype(qf.dtype),
+                        q_offset=start, kv_lengths=kv_lengths)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, C, -1), backend)
+    return out, {"k": k_buf, "v": v_buf, "lat_c": lat_c, "lat_r": lat_r}
+
+
+# ---------------------------------------------------------------------------
 # decode attention against the int8 SLC cache (dMVM)
 # ---------------------------------------------------------------------------
 def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,

@@ -101,6 +101,30 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     return out.astype(x.dtype)
 
 
+def apply_rope_spmd(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Partition-safe RoPE: same rotation as :func:`apply_rope` but written
+    as a per-position [D, D] rotation *contraction* instead of rotate-half's
+    split+concat.  XLA's SPMD partitioner mis-partitions the concat when
+    ``x`` arrives as a deferred partial sum (observed on jax 0.4.x: the
+    partials are gathered without being reduced, scaling the result by the
+    sharded axis size); a contraction forces the reduction, so the sharded
+    chunked-prefill path routes RoPE through here.  O(D^2) per position vs
+    O(D) — negligible beside attention, and only paid under a mesh."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [B, T, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    i = jnp.arange(half)
+    rot = jnp.zeros((*ang.shape[:-1], d, d), jnp.float32)      # [B, T, D, D]
+    rot = (rot.at[..., i, i].set(cos)
+              .at[..., half + i, i].set(-sin)
+              .at[..., i, half + i].set(sin)
+              .at[..., half + i, half + i].set(cos))
+    out = jnp.einsum("...thd,...tde->...the", x.astype(jnp.float32), rot)
+    return out.astype(x.dtype)
+
+
 def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
     pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
     div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))

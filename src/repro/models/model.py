@@ -97,6 +97,31 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int, rt: Runtime):
                      lengths=batch.get("lengths"))
 
 
+def init_prefill_carry(cfg: ModelConfig, buf_len: int):
+    """Float K/V carry for a chunked prefill (see transformer.prefill_chunk).
+    Attention-family decoders only — encdec and SSM/hybrid stacks raise and
+    keep the one-shot prefill path."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill targets decoder-only LMs")
+    return T.init_prefill_carry(cfg, buf_len)
+
+
+def prefill_chunk(params, cfg: ModelConfig, carry: dict, tokens, n_real,
+                  rt: Runtime):
+    """Consume ``tokens`` ([1, C], ``n_real`` of them real) at the carry's
+    cursor; returns (last-real-token logits, advanced carry)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill targets decoder-only LMs")
+    return T.prefill_chunk(params, cfg, carry, tokens, n_real, rt)
+
+
+def finalize_prefill_carry(cfg: ModelConfig, carry: dict, max_len: int):
+    """Quantize a finished carry into the B=1 decode state write_slot lands."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill targets decoder-only LMs")
+    return T.finalize_prefill_carry(cfg, carry, max_len)
+
+
 def decode_step(params, cfg: ModelConfig, state: dict, token, rt: Runtime):
     if cfg.family == "encdec":
         return encdec.decode_step(params, cfg, state, token, rt)

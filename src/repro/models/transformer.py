@@ -503,6 +503,134 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: the prompt is consumed [1, C] tokens at a time so decode
+# iterations never stall behind a full-prompt prefill (vLLM-style chunked
+# prefill mapped onto the paper's SLC-slot residency)
+# ---------------------------------------------------------------------------
+def init_prefill_carry(cfg: ModelConfig, buf_len: int) -> dict:
+    """Float K/V carry for one in-flight chunked prefill (B=1).
+
+    The carry is the full-precision working set of the "GPU stage": each
+    attention layer keeps [n_p, 1, buf_len, H, D] float K/V so later chunks
+    attend the earlier prefix at prefill precision (what makes chunked
+    prefill token-identical to one-shot).  MLA additionally carries the
+    compressed latent, which is what finalization quantizes into the SLC
+    cache.  ``buf_len`` should be ``max_len + chunk`` so a ragged final
+    chunk's padded tail never clamp-wraps into valid rows.
+
+    SSM/hybrid stacks keep the exact-length prefill path (their recurrent
+    state would integrate chunk-boundary error) — requesting a carry for one
+    raises.
+    """
+    groups = []
+    for (start, count, period) in layer_groups(cfg):
+        n_p = count // period
+        slots = []
+        for s in range(period):
+            if cfg.layer_kind(start + s) == "ssm":
+                raise NotImplementedError(
+                    "chunked prefill carries attention K/V only; SSM/hybrid "
+                    "stacks prefill at exact length (see serve engine)")
+            if cfg.attn_type == "mla":
+                slots.append({
+                    "k": jnp.zeros((n_p, 1, buf_len, cfg.n_heads,
+                                    cfg.qk_nope_head_dim + cfg.qk_rope_head_dim),
+                                   jnp.float32),
+                    "v": jnp.zeros((n_p, 1, buf_len, cfg.n_heads,
+                                    cfg.v_head_dim), jnp.float32),
+                    "lat_c": jnp.zeros((n_p, 1, buf_len, cfg.kv_lora_rank),
+                                       jnp.float32),
+                    "lat_r": jnp.zeros((n_p, 1, buf_len, cfg.qk_rope_head_dim),
+                                       jnp.float32)})
+            else:
+                kv = (n_p, 1, buf_len, cfg.n_kv_heads, cfg.head_dim)
+                slots.append({"k": jnp.zeros(kv, jnp.float32),
+                              "v": jnp.zeros(kv, jnp.float32)})
+        groups.append(tuple(slots))
+    return {"groups": tuple(groups), "pos": jnp.zeros((1,), jnp.int32)}
+
+
+def prefill_chunk(p: Params, cfg: ModelConfig, carry: dict, tokens: jax.Array,
+                  n_real: jax.Array, rt: Runtime) -> tuple[jax.Array, dict]:
+    """Consume one ``[1, C]`` token chunk at the carry's cursor.
+
+    ``n_real`` (traced scalar) is the number of real tokens in the chunk —
+    the final chunk of a prompt is right-padded to C, and a chunk may be cut
+    short by the engine's per-iteration token budget.  Returns (logits of
+    the chunk's last real token [1, V], updated carry).  The cursor
+    (``carry["pos"]``) advances by ``n_real``, so one compiled step serves
+    every offset and every ragged tail.
+    """
+    C = tokens.shape[1]
+    pos0 = jnp.asarray(carry["pos"], jnp.int32)[0]
+    n_real = jnp.asarray(n_real, jnp.int32)
+    x = _embed(p, cfg, tokens, pos_offset=pos0)
+    positions = jnp.broadcast_to(pos0 + jnp.arange(C), (1, C))
+    kv_lengths = jnp.broadcast_to(pos0 + n_real, (1,))
+    new_groups = []
+    for (start, count, period), slots, bufs in zip(
+            layer_groups(cfg), p["groups"], carry["groups"]):
+        def body(xx, xs):
+            slot_trees, slot_bufs = xs
+            new_b = []
+            for s in range(period):
+                pp = slot_trees[s]
+                h = L.apply_norm(pp["ln1"], xx)
+                if cfg.attn_type == "mla":
+                    mix, nb = A.mla_chunk(pp["attn"], cfg, h, positions,
+                                          slot_bufs[s], pos0, kv_lengths, rt)
+                else:
+                    mix, nb = A.gqa_chunk(pp["attn"], cfg, h, positions,
+                                          slot_bufs[s], pos0, kv_lengths, rt)
+                xx = xx + mix
+                if "moe" in pp:
+                    mo, _ = _moe_block(pp["moe"], L.apply_norm(pp["ln2"], xx),
+                                       cfg, rt)
+                    xx = xx + mo
+                elif "mlp" in pp:
+                    xx = xx + L.apply_mlp(pp["mlp"], L.apply_norm(pp["ln2"], xx),
+                                          cfg.mlp_type, rt.backend)
+                new_b.append(nb)
+            return xx, tuple(new_b)
+        x, nb = jax.lax.scan(body, x, (slots, bufs))
+        new_groups.append(nb)
+    x = L.apply_norm(p["ln_f"], x)
+    last = jnp.take_along_axis(
+        x, jnp.reshape(n_real - 1, (1, 1, 1)).astype(jnp.int32), axis=1)[:, 0]
+    logits = _lm_head(p, cfg, last, rt)
+    return logits, {"groups": tuple(new_groups),
+                    "pos": jnp.asarray(carry["pos"], jnp.int32) + n_real}
+
+
+def finalize_prefill_carry(cfg: ModelConfig, carry: dict, max_len: int) -> dict:
+    """Quantize a completed chunked-prefill carry into a B=1 decode state —
+    the prefill->decode KV handoff (float "GPU stage" K/V landing as int8
+    in the SLC region).  Per-(token, head) quantization means the int8 rows
+    are the same the one-shot prefill would have written.  The result plugs
+    straight into :func:`write_slot`."""
+    groups = []
+    for bufs in carry["groups"]:
+        slots = []
+        for b in bufs:
+            if "lat_c" in b:                     # MLA latent cache
+                lat = jnp.concatenate([b["lat_c"], b["lat_r"]],
+                                      axis=-1)[:, :, :max_len]
+                amax = jnp.max(jnp.abs(lat), -1, keepdims=True)
+                sc = jnp.maximum(amax, 1e-8) / 127.0
+                lq = jnp.clip(jnp.round(lat / sc), -127, 127).astype(jnp.int8)
+                slots.append({"c_q": lq, "c_s": sc.astype(jnp.float32)})
+            else:
+                from repro.core.quant import quantize_kv
+                k_q, k_s = quantize_kv(b["k"][:, :, :max_len])
+                v_q, v_s = quantize_kv(b["v"][:, :, :max_len])
+                slots.append({"k_q": k_q, "k_s": k_s,
+                              "v_q": v_q, "v_s": v_s})
+        groups.append(tuple(slots))
+    return {"groups": tuple(groups),
+            "pos": jnp.asarray(carry["pos"], jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
 # loss (chunked over sequence to bound logits memory)
 # ---------------------------------------------------------------------------
 def lm_loss(p: Params, cfg: ModelConfig, inputs, labels, rt: Runtime,

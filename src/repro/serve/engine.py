@@ -13,6 +13,14 @@ Two engines share that pipeline:
   positions), retires finished sequences, and backfills freed slots
   mid-flight.  The jitted decode step always sees a fixed [n_slots]
   batch, so continuous batching costs zero recompiles.
+
+With ``chunk=c`` the continuous engine runs *chunked prefill*: admission no
+longer stalls the decode pool for a full-prompt prefill — each iteration
+packs the resident decode slots plus at most ``max_step_tokens - n_decoding``
+prefill tokens (in ``[1, c]`` chunks at the request's ``prefill_pos`` cursor)
+into one engine step, so TPOT of running requests never absorbs a whole
+prompt.  Admission order and preemption are delegated to a pluggable
+``SchedulingPolicy`` (FIFO / priority / SJF / fair-share).
 """
 from __future__ import annotations
 
@@ -30,7 +38,8 @@ from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.transformer import Runtime
 from repro.serve.quantize import quantize_tree
-from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   SchedulingPolicy)
 
 
 def _place_on_mesh(cfg: ModelConfig, params: Any, qparams: Any, rt: Runtime):
@@ -58,11 +67,10 @@ class Engine:
         if self.rt.mesh is not None:
             self.params, self.qparams, _ = _place_on_mesh(
                 self.cfg, self.params, self.qparams, self.rt)
-        rt_decode = dataclasses.replace(self.rt)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, self.cfg, b, self.max_len, self.rt))
         self._decode = jax.jit(
-            lambda p, s, t: M.decode_step(p, self.cfg, s, t, rt_decode))
+            lambda p, s, t: M.decode_step(p, self.cfg, s, t, self.rt))
 
     def generate(self, batch: dict, steps: int, greedy: bool = True,
                  rng: jax.Array | None = None):
@@ -97,17 +105,34 @@ class ContinuousBatchingEngine:
     Each engine ``step()`` is one serving iteration:
 
       1. retire finished requests (slots freed for backfill);
-      2. admit queued requests into free slots — each admission runs a
-         single-request prefill (the "GPU stage") and lands its int8 KV
-         row plus per-slot position into the pooled decode state;
-      3. one batched W8A8 decode step over all slots; active slots emit
-         their next token, inactive slots compute into masked garbage.
+      2. preempt residents the policy bumps back to the queue (only when
+         the queue is blocked on slots) — recompute-style: output is kept
+         and replayed through the decode path on re-admission, so a
+         preempted request is token-identical to an un-preempted run;
+      3. admit queued requests into free slots in **policy** order
+         (FIFO / priority / SJF / fair-share);
+      4. advance in-flight prefills.  Unchunked (``chunk=None``): each
+         admission runs one atomic single-request prefill (the "GPU
+         stage") and lands its int8 KV row into the pooled decode state.
+         Chunked (``chunk=c``): PREFILLING slots consume ``[1, c]`` token
+         chunks at their ``prefill_pos`` cursor against a carried float
+         K/V buffer, bounded by the per-iteration **token budget**
+         (``max_step_tokens`` minus one per resident decode slot); the
+         final chunk quantizes the carry into the slot row and emits the
+         request's first token;
+      5. one batched W8A8 decode step over all slots; slots with a
+         DECODING resident emit their next token (greedy, or per-request
+         temperature/top-k sampling), other slots compute into masked
+         garbage.
 
-    Prefill shapes are bucketed (multiples of ``prefill_bucket``) for pure
-    attention stacks — ragged right-padding is exact there thanks to the
-    per-request length masking in :func:`repro.models.transformer.prefill`.
-    SSM/hybrid stacks prefill at exact prompt length (their recurrent state
-    would integrate padding), paying one compile per distinct length.
+    Chunked prefill is exact for attention stacks (the carry keeps prefill
+    precision), so outputs are token-identical to the unchunked engine for
+    every policy.  SSM/hybrid stacks keep the exact-length prefill path
+    (their recurrent state would integrate chunk-boundary error): ``chunk``
+    is ignored for them.  Unchunked attention prefills are bucketed
+    (multiples of ``prefill_bucket``) — ragged right-padding is exact there
+    thanks to per-request length masking in
+    :func:`repro.models.transformer.prefill`.
 
     Passing a ``Runtime`` with a mesh turns on the sharded-serve path:
     params and quantized "QLC" weights land on the mesh per
@@ -116,13 +141,18 @@ class ContinuousBatchingEngine:
     decode state — the slot-pool SLC cache — shards its slot axis over the
     data axes with KV heads over ``model``.  The jitted decode step pins
     those shardings so slot churn (``write_slot`` admissions) never
-    migrates the pool.  Scheduling stays host-side and identical to the
-    single-device engine, so outputs are token-for-token reproducible.
+    migrates the pool, and the chunked-prefill carry is pinned the same
+    way (``prefill_carry_shardings``).  Scheduling stays host-side and
+    identical to the single-device engine, so outputs are token-for-token
+    reproducible.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int = 4,
                  max_len: int = 256, quantize: bool = True,
-                 rt: Runtime | None = None, prefill_bucket: int = 16):
+                 rt: Runtime | None = None, prefill_bucket: int = 16,
+                 policy: str | SchedulingPolicy | None = "fifo",
+                 chunk: int | None = None,
+                 max_step_tokens: int | None = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -135,14 +165,42 @@ class ContinuousBatchingEngine:
         self.qparams = quantize_tree(params) if quantize else params
         self._has_ssm = any(cfg.layer_kind(i) == "ssm"
                             for i in range(cfg.n_layers))
-        self.scheduler = Scheduler(n_slots, max_len)
+        # SSM/hybrid stacks keep the exact-length prefill (recurrent-state
+        # boundary); attention stacks chunk
+        self.chunk = None if (chunk is None or self._has_ssm) else int(chunk)
+        if self.chunk is not None and self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if self.chunk:
+            self.max_step_tokens = (max_step_tokens if max_step_tokens
+                                    else n_slots + self.chunk)
+            if self.max_step_tokens < n_slots + 1:
+                raise ValueError(
+                    f"max_step_tokens {self.max_step_tokens} leaves no room "
+                    f"for prefill progress beside {n_slots} decode slots "
+                    f"(need >= n_slots + 1)")
+        else:
+            self.max_step_tokens = max_step_tokens
+        self.scheduler = Scheduler(n_slots, max_len, policy)
+        self.policy = self.scheduler.policy
         self.state = M.init_decode_state(cfg, n_slots, max_len)
         self._last_tok = np.zeros((n_slots,), np.int32)
+        self._carries: dict[int, Any] = {}        # slot -> prefill carry
+        self._rngs: dict[int, np.random.Generator] = {}   # rid -> sampler
         self._next_rid = 0
         self._t0 = time.perf_counter()
+        self.stats = {"steps": 0, "decode_steps": 0, "prefill_tokens": 0,
+                      "chunks": 0, "max_step_prefill_tokens": 0,
+                      "preemptions": 0}
 
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len, self.rt))
+        if self.chunk:
+            self._carry0 = M.init_prefill_carry(cfg, max_len + self.chunk)
+            self._chunk_fn = jax.jit(
+                lambda p, c, t, n: M.prefill_chunk(p, cfg, c, t, n, self.rt))
+            self._finalize_write = jax.jit(
+                lambda s, slot, c: T.write_slot(
+                    s, slot, M.finalize_prefill_carry(cfg, c, max_len)))
         if self.rt.mesh is None:
             self._decode = jax.jit(
                 lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
@@ -172,15 +230,37 @@ class ContinuousBatchingEngine:
         # admissions write a replicated B=1 row into the sharded pool; the
         # out_shardings pin keeps the pool resident (no migration per admit)
         self._write = jax.jit(T.write_slot, out_shardings=ssh)
+        if self.chunk:
+            csh = SH.prefill_carry_shardings(
+                cfg, jax.eval_shape(lambda: self._carry0), mesh)
+            self._carry0 = jax.device_put(self._carry0, csh)
+            # pin the carry's layout across chunk steps (heads stay over
+            # `model`, matching the pool so finalize->write never reshards)
+            self._chunk_fn = jax.jit(
+                lambda p, c, t, n: M.prefill_chunk(p, cfg, c, t, n, self.rt),
+                out_shardings=(NamedSharding(mesh, P()), csh))
+            self._finalize_write = jax.jit(
+                lambda s, slot, c: T.write_slot(
+                    s, slot, M.finalize_prefill_carry(cfg, c, self.max_len)),
+                out_shardings=ssh)
 
     # -- request intake ---------------------------------------------------
     def submit(self, prompt: Iterable[int], max_new_tokens: int,
                eos_id: int | None = None,
-               arrival_time: float | None = None) -> Request:
+               arrival_time: float | None = None, *,
+               priority: int = 0, user: str | None = None,
+               temperature: float = 0.0, top_k: int | None = None,
+               seed: int | None = None) -> Request:
+        if temperature < 0:
+            raise ValueError("temperature must be >= 0 (0 = greedy)")
+        if top_k is not None and top_k < 1:
+            raise ValueError("top_k must be >= 1")
         req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       arrival_time=(self._now() if arrival_time is None
-                                    else arrival_time))
+                                    else arrival_time),
+                      priority=priority, user=user, temperature=temperature,
+                      top_k=top_k, seed=seed)
         self._next_rid += 1
         self.scheduler.submit(req)
         return req
@@ -193,14 +273,73 @@ class ContinuousBatchingEngine:
         timestamps share the caller's timebase."""
         self._t0 = time.perf_counter()
 
-    # -- admission: per-request prefill into a slot -----------------------
+    # -- per-request sampling ---------------------------------------------
+    def _sample_token(self, req: Request, row: np.ndarray) -> int:
+        """Next token for one slot: greedy argmax at temperature 0, else
+        top-k temperature sampling from a per-request deterministic stream
+        (seeded by ``req.seed``, falling back to the rid).  One uniform
+        draw per token, so a preempted request's replay re-consumes the
+        stream identically."""
+        if req.temperature <= 0:
+            return int(row.argmax())
+        rng = self._rngs.get(req.rid)
+        if rng is None:
+            seed = req.seed if req.seed is not None else req.rid
+            rng = self._rngs[req.rid] = np.random.default_rng(seed)
+        logits = row.astype(np.float64) / req.temperature
+        if req.top_k is not None and req.top_k < logits.size:
+            kth = np.partition(logits, -req.top_k)[-req.top_k]
+            idx = np.nonzero(logits >= kth)[0]
+        else:
+            idx = np.arange(logits.size)
+        z = logits[idx] - logits[idx].max()
+        p = np.exp(z)
+        p /= p.sum()
+        u = rng.random()
+        j = min(int(np.searchsorted(np.cumsum(p), u, side="right")),
+                len(idx) - 1)
+        return int(idx[j])
+
+    def _next_tokens(self, logits, dec: list[tuple[int, Request]]) -> np.ndarray:
+        if all(req.temperature <= 0 for _, req in dec):
+            return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        rows = np.asarray(logits, np.float32)
+        out = np.zeros((self.n_slots,), np.int64)
+        for slot, req in dec:
+            out[slot] = self._sample_token(req, rows[slot])
+        return out
+
+    # -- admission: prefill into a slot -----------------------------------
     def _bucket(self, n: int) -> int:
         if self._has_ssm:
             return n                       # exact: no padding through SSM state
         b = self.prefill_bucket
         return min(self.max_len, -(-n // b) * b)
 
-    def _admit_one(self, req: Request) -> None:
+    def _emit_first(self, req: Request, logits) -> None:
+        """A request's prefill just completed: emit its first token (or
+        re-feed the recorded one when resuming after preemption) and move
+        it to DECODING."""
+        # the draw always runs so a resumed request's sampling stream stays
+        # aligned with its original run
+        tok = self._sample_token(req, np.asarray(logits, np.float32)[0])
+        if req.output:                     # resumed: recorded token wins
+            tok = req.output[0]
+            req.replay_pos = 1
+        else:
+            req.output.append(tok)
+            req.replay_pos = len(req.output)
+            req.first_token_time = self._now()
+            self.policy.on_tokens(req, 1)
+        req.state = RequestState.DECODING
+        self._last_tok[req.slot] = tok
+        if req.replay_pos >= len(req.output) and req.should_stop():
+            self._retire(req, self._now())            # budget of 1 token
+
+    def _admit_atomic(self, req: Request) -> int:
+        """Unchunked admission: one full-prompt prefill lands the int8 KV
+        row.  Exception-safe: a failed prefill (OOM, compile error) frees
+        the slot and fails the request instead of leaking the slot."""
         plen = req.prompt_len
         padded = self._bucket(plen)
         toks = np.zeros((1, padded), np.int32)
@@ -208,37 +347,117 @@ class ContinuousBatchingEngine:
         batch = {"inputs": jnp.asarray(toks)}
         if padded != plen or not self._has_ssm:
             batch["lengths"] = jnp.array([plen], jnp.int32)
-        logits, one = self._prefill(self.params, batch)
-        self.state = self._write(self.state, jnp.int32(req.slot), one)
-        tok = int(jnp.argmax(logits, -1)[0])
-        req.output.append(tok)
-        req.first_token_time = self._now()
-        req.state = RequestState.DECODING
-        self._last_tok[req.slot] = tok
+        try:
+            logits, one = self._prefill(self.params, batch)
+            self.state = self._write(self.state, jnp.int32(req.slot), one)
+        except Exception as e:                        # noqa: BLE001
+            self._fail(req, f"{type(e).__name__}: {e}")
+            return 0
+        req.prefill_pos = plen
+        self._emit_first(req, logits)
+        return plen
+
+    def _run_chunk(self, req: Request, n: int) -> int:
+        """Advance one PREFILLING slot by ``n`` prompt tokens (one [1, chunk]
+        call; the tail beyond ``n`` is padding).  Finalizes into the pool on
+        the last chunk.  Exception-safe like :meth:`_admit_atomic`."""
+        slot = req.slot
+        toks = np.zeros((1, self.chunk), np.int32)
+        toks[0, :n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
+        try:
+            logits, self._carries[slot] = self._chunk_fn(
+                self.params, self._carries[slot], jnp.asarray(toks),
+                jnp.int32(n))
+            req.prefill_pos += n
+            self.stats["chunks"] += 1
+            if req.prefill_pos >= req.prompt_len:
+                carry = self._carries.pop(slot)
+                self.state = self._finalize_write(
+                    self.state, jnp.int32(slot), carry)
+                self._emit_first(req, logits)
+        except Exception as e:                        # noqa: BLE001
+            self._carries.pop(slot, None)
+            self._fail(req, f"{type(e).__name__}: {e}")
+            return 0
+        return n
+
+    def _preempt(self, req: Request, now: float) -> None:
+        """Bump a resident back to the queue (recompute-style): generated
+        tokens are kept and replayed on re-admission."""
+        self._carries.pop(req.slot, None)
+        self._rngs.pop(req.rid, None)     # replay re-consumes the stream
+        self.scheduler.preempt(req, now)
+        self.stats["preemptions"] += 1
+
+    def _retire(self, req: Request, now: float) -> None:
+        self.scheduler.retire(req, now)
+        self._rngs.pop(req.rid, None)     # release the per-request sampler
+
+    def _fail(self, req: Request, error: str) -> None:
+        self.scheduler.fail(req, self._now(), error=error)
+        self._rngs.pop(req.rid, None)
 
     # -- one serving iteration --------------------------------------------
     def step(self) -> bool:
         """Run one engine iteration; returns True if any work was done."""
         now = self._now()
+        self.stats["steps"] += 1
+        step_pf = 0
         for slot, req in list(self.scheduler.active.items()):
-            if req.should_stop():
-                self.scheduler.retire(req, now)
+            if (req.state is RequestState.DECODING
+                    and req.replay_pos >= len(req.output)
+                    and req.should_stop()):
+                self._retire(req, now)
+        # preemption: only meaningful when the queue is blocked on slots
+        if not self.scheduler.free_slots:
+            for req in self.scheduler.preemption_victims(now):
+                self._preempt(req, now)
         for req in self.scheduler.admit(now):
-            self._admit_one(req)
-            if req.should_stop():                   # budget of 1 token
-                self.scheduler.retire(req, self._now())
-        if not self.scheduler.active:
-            return False
+            if self.chunk:
+                self._carries[req.slot] = self._carry0
+            else:
+                step_pf += self._admit_atomic(req)
+        if self.chunk:
+            budget = self.max_step_tokens - sum(
+                1 for r in self.scheduler.active.values()
+                if r.state is RequestState.DECODING)
+            for slot in sorted(self.scheduler.active):
+                req = self.scheduler.active[slot]
+                while (budget > 0 and req.state is RequestState.PREFILLING):
+                    n = min(self.chunk, req.prompt_len - req.prefill_pos,
+                            budget)
+                    got = self._run_chunk(req, n)
+                    if not got:
+                        break
+                    budget -= got
+                    step_pf += got
+        self.stats["prefill_tokens"] += step_pf
+        self.stats["max_step_prefill_tokens"] = max(
+            self.stats["max_step_prefill_tokens"], step_pf)
+        dec = [(slot, r) for slot, r in self.scheduler.active.items()
+               if r.state is RequestState.DECODING]
+        if not dec:
+            return step_pf > 0
+        self.stats["decode_steps"] += 1
         logits, self.state = self._decode(
             self.qparams, self.state, jnp.asarray(self._last_tok))
-        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        nxt = self._next_tokens(logits, dec)
         now = self._now()
-        for slot, req in list(self.scheduler.active.items()):
+        for slot, req in dec:
+            if req.replay_pos < len(req.output):
+                # resuming after preemption: this decode recomputed a token
+                # we already emitted — re-feed the recorded one, no append
+                tok = req.output[req.replay_pos]
+                req.replay_pos += 1
+                self._last_tok[slot] = tok
+                continue
             tok = int(nxt[slot])
             req.output.append(tok)
+            req.replay_pos = len(req.output)
             self._last_tok[slot] = tok
+            self.policy.on_tokens(req, 1)
             if req.should_stop():
-                self.scheduler.retire(req, now)
+                self._retire(req, now)
         return True
 
     # -- drive to completion ----------------------------------------------

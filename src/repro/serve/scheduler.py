@@ -1,17 +1,40 @@
 """Request queue + slot scheduler for continuous batching.
 
 Host-side control plane for the serve engine: requests arrive with
-variable-length prompts, wait in a FIFO queue, are admitted into free decode
+variable-length prompts, wait in a queue, are admitted into free decode
 *slots* (rows of the pooled SLC-region KV cache), and retire when they hit
 their token budget or emit EOS — freeing the slot for the next queued
 request mid-flight (backfill).  The device never sees any of this: it always
 steps a fixed [n_slots] batch, and the scheduler just decides which rows are
 live.
 
+Admission *order* — and whether a running request gets bumped back to the
+queue — is delegated to a pluggable :class:`SchedulingPolicy`:
+
+* :class:`FIFOPolicy`        — arrival order (the original behaviour);
+* :class:`PriorityPolicy`    — highest ``Request.priority`` first, optionally
+  preempting a strictly lower-priority resident when the queue is blocked;
+* :class:`SJFPolicy`         — shortest remaining work
+  (prompt + budget - generated) first;
+* :class:`FairSharePolicy`   — deficit round-robin over ``Request.user``
+  with a per-residency token *quantum*: a resident that has generated its
+  quantum while a less-served user waits is preempted back to the queue.
+
+Preemption is recompute-style (vLLM's default): the victim keeps its
+generated tokens, its slot is freed, and on re-admission the engine
+re-prefills the prompt and *replays* the kept tokens through the decode path
+so the resumed request is token-identical to an un-preempted run.
+
 The slot lifecycle mirrors the paper's SLC-region residency:
 
     QUEUED --admit--> PREFILLING --first token--> DECODING --retire--> FINISHED
-                (slot allocated)                        (slot freed, reused)
+                (slot allocated)         |                 (slot freed, reused)
+                      ^                  | preempt (slot freed,
+                      +------------------+  output kept, requeued)
+
+``PREFILLING`` carries progress: ``Request.prefill_pos`` is the chunk cursor
+— a request may stay PREFILLING across several engine iterations while its
+prompt is consumed chunk by chunk under the per-iteration token budget.
 
 Slots are reused lowest-index-first so admission order is deterministic and
 testable.  All scheduling is O(queue) Python on the host — the jitted decode
@@ -22,7 +45,6 @@ from __future__ import annotations
 import dataclasses
 import enum
 import heapq
-from collections import deque
 from typing import Optional
 
 
@@ -41,11 +63,20 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
+    priority: int = 0                     # higher = more urgent (PriorityPolicy)
+    user: Optional[str] = None            # fair-share accounting key
+    temperature: float = 0.0              # 0 = greedy argmax
+    top_k: Optional[int] = None           # restrict sampling to top-k logits
+    seed: Optional[int] = None            # per-request sampling seed
 
     # filled in by the scheduler / engine
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
     output: list[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0                  # chunked-prefill cursor (tokens done)
+    replay_pos: int = 0                   # tokens re-fed after a preemption
+    n_preemptions: int = 0
+    error: Optional[str] = None           # set when admission/prefill failed
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -58,27 +89,211 @@ class Request:
     def done(self) -> bool:
         return self.state is RequestState.FINISHED
 
+    @property
+    def remaining_work(self) -> int:
+        """Tokens left to process (prefill + generate) — the SJF job size."""
+        return max(0, self.prompt_len - self.prefill_pos) \
+            + max(0, self.max_new_tokens - len(self.output))
+
     def should_stop(self) -> bool:
         if len(self.output) >= self.max_new_tokens:
             return True
         return self.eos_id is not None and bool(self.output) \
             and self.output[-1] == self.eos_id
 
+    def sort_key(self):
+        """Deterministic tiebreak shared by every policy."""
+        return (self.arrival_time, self.rid)
 
+
+# ---------------------------------------------------------------------------
+# scheduling policies
+# ---------------------------------------------------------------------------
+class SchedulingPolicy:
+    """Admission ordering + optional preemption for the slot scheduler.
+
+    Subclasses override :meth:`select` (which queued request is admitted
+    next) and optionally :meth:`victims` (which residents to bump back to the
+    queue this iteration).  The engine reports generation progress through
+    the ``on_*`` hooks so stateful policies (fair share) can account service.
+    """
+
+    name = "base"
+
+    # -- admission --------------------------------------------------------
+    def select(self, queue: list[Request], now: float) -> Request:
+        return min(queue, key=lambda r: r.sort_key())
+
+    # -- preemption -------------------------------------------------------
+    def victims(self, active: dict[int, "Request"], queue: list[Request],
+                now: float) -> list[Request]:
+        """Residents to preempt back to the queue (default: never)."""
+        return []
+
+    # -- accounting hooks -------------------------------------------------
+    def on_admit(self, req: Request, now: float) -> None:
+        pass
+
+    def on_tokens(self, req: Request, n: int) -> None:
+        pass
+
+    def on_finish(self, req: Request, now: float) -> None:
+        pass
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Arrival order — the baseline continuous-batching behaviour."""
+
+    name = "fifo"
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Highest ``Request.priority`` first; FIFO within a priority class.
+
+    With ``preemptive=True`` a queued request whose priority strictly
+    exceeds a resident's bumps the lowest-priority resident back to the
+    queue (at most one victim per engine iteration — admission latency of
+    one step, zero wasted slots).
+    """
+
+    name = "priority"
+
+    def __init__(self, preemptive: bool = False):
+        self.preemptive = preemptive
+
+    def select(self, queue, now):
+        return min(queue, key=lambda r: (-r.priority,) + r.sort_key())
+
+    def victims(self, active, queue, now):
+        if not (self.preemptive and active and queue):
+            return []
+        top = max(queue, key=lambda r: (r.priority,))
+        victim = min(active.values(), key=lambda r: (r.priority,) + r.sort_key())
+        if top.priority > victim.priority:
+            return [victim]
+        return []
+
+
+class SJFPolicy(SchedulingPolicy):
+    """Shortest job first: smallest remaining work (prompt left to prefill
+    plus tokens left to generate).  Preempted requests keep credit for what
+    they already generated, so a resumed short job stays short."""
+
+    name = "sjf"
+
+    def select(self, queue, now):
+        return min(queue, key=lambda r: (r.remaining_work,) + r.sort_key())
+
+
+class FairSharePolicy(SchedulingPolicy):
+    """Deficit round-robin over users with budget-based preemption.
+
+    Admission picks the queued request whose user has been served the fewest
+    tokens (deficit round-robin — a flood from one user cannot starve
+    another).  ``quantum`` bounds a residency: once a request has generated
+    ``quantum`` tokens in its current residency while a strictly less-served
+    user waits in the queue, it is preempted back to the queue — the
+    time-slicing that bounds starvation even with fewer slots than users.
+    """
+
+    name = "fair"
+
+    def __init__(self, quantum: int = 32):
+        if quantum < 1:
+            raise ValueError("fair-share quantum must be >= 1")
+        self.quantum = quantum
+        self.served: dict[str, int] = {}
+        self._admit_len: dict[int, int] = {}    # rid -> len(output) at admit
+
+    @staticmethod
+    def _user(req: Request) -> str:
+        return req.user if req.user is not None else f"rid{req.rid}"
+
+    def select(self, queue, now):
+        return min(queue, key=lambda r: (self.served.get(self._user(r), 0),)
+                   + r.sort_key())
+
+    def on_admit(self, req, now):
+        self._admit_len[req.rid] = len(req.output)
+
+    def on_tokens(self, req, n):
+        u = self._user(req)
+        self.served[u] = self.served.get(u, 0) + n
+
+    def on_finish(self, req, now):
+        self._admit_len.pop(req.rid, None)
+
+    def residency_tokens(self, req: Request) -> int:
+        return len(req.output) - self._admit_len.get(req.rid, 0)
+
+    def victims(self, active, queue, now):
+        if not queue:
+            return []
+        waiting = {}                      # user -> served (distinct waiters)
+        for r in queue:
+            u = self._user(r)
+            waiting.setdefault(u, self.served.get(u, 0))
+        eligible = [r for r in active.values()
+                    if r.state is RequestState.DECODING
+                    and self.residency_tokens(r) >= self.quantum]
+        # bump the most-served residents first, at most one per strictly
+        # less-served waiting user — preempting more would just re-admit
+        # the extra victims next iteration after a wasted re-prefill
+        eligible.sort(key=lambda r: (-self.served.get(self._user(r), 0),)
+                      + r.sort_key())
+        out = []
+        for req in eligible:
+            mine = self.served.get(self._user(req), 0)
+            n_under = sum(1 for s in waiting.values() if s < mine)
+            if len(out) < n_under:
+                out.append(req)
+        return out
+
+
+POLICIES: dict[str, type[SchedulingPolicy]] = {
+    "fifo": FIFOPolicy,
+    "priority": PriorityPolicy,
+    "sjf": SJFPolicy,
+    "fair": FairSharePolicy,
+}
+
+
+def make_policy(spec: "str | SchedulingPolicy | None") -> SchedulingPolicy:
+    """``"fifo" | "priority" | "sjf" | "fair" | "fair:8"`` (fair quantum) or
+    an already-built policy instance."""
+    if spec is None:
+        return FIFOPolicy()
+    if isinstance(spec, SchedulingPolicy):
+        return spec
+    name, _, arg = spec.partition(":")
+    if name not in POLICIES:
+        raise ValueError(f"unknown policy {name!r}; one of {sorted(POLICIES)}")
+    if name == "fair" and arg:
+        return FairSharePolicy(quantum=int(arg))
+    if name == "priority" and arg:
+        return PriorityPolicy(preemptive=arg in ("1", "preempt", "true"))
+    return POLICIES[name]()
+
+
+# ---------------------------------------------------------------------------
+# slot scheduler
+# ---------------------------------------------------------------------------
 class Scheduler:
-    """FIFO admission into a fixed pool of decode slots.
+    """Policy-driven admission into a fixed pool of decode slots.
 
     ``max_len`` bounds prompt + generation per slot; a request that cannot
     ever fit is rejected at submit time (ValueError) rather than deadlocking
     the queue.
     """
 
-    def __init__(self, n_slots: int, max_len: int):
+    def __init__(self, n_slots: int, max_len: int,
+                 policy: "str | SchedulingPolicy | None" = None):
         if n_slots < 1:
             raise ValueError("need at least one decode slot")
         self.n_slots = n_slots
         self.max_len = max_len
-        self.queue: deque[Request] = deque()
+        self.policy = make_policy(policy)
+        self.queue: list[Request] = []
         self.free_slots: list[int] = list(range(n_slots))   # min-heap
         heapq.heapify(self.free_slots)
         self.active: dict[int, Request] = {}                # slot -> request
@@ -102,18 +317,39 @@ class Scheduler:
 
     # -- admission --------------------------------------------------------
     def admit(self, now: float = 0.0) -> list[Request]:
-        """Move queued requests into free slots, FIFO, until slots run out.
-        Returns the newly admitted requests (slot assigned, PREFILLING)."""
+        """Move queued requests into free slots in policy order until slots
+        run out.  Returns the newly admitted requests (slot assigned,
+        PREFILLING, ``prefill_pos`` reset)."""
         admitted = []
         while self.queue and self.free_slots:
-            req = self.queue.popleft()
+            req = self.policy.select(self.queue, now)
+            self.queue.remove(req)
             slot = heapq.heappop(self.free_slots)
             req.slot = slot
             req.state = RequestState.PREFILLING
+            req.prefill_pos = 0
+            req.replay_pos = 0
             req.admit_time = now
             self.active[slot] = req
+            self.policy.on_admit(req, now)
             admitted.append(req)
         return admitted
+
+    # -- preemption -------------------------------------------------------
+    def preemption_victims(self, now: float = 0.0) -> list[Request]:
+        return self.policy.victims(self.active, self.queue, now)
+
+    def preempt(self, req: Request, now: float = 0.0) -> None:
+        """Bump a resident back to the queue: the slot is freed, generated
+        output is kept (the engine replays it on re-admission)."""
+        assert req.slot is not None and self.active.get(req.slot) is req
+        del self.active[req.slot]
+        heapq.heappush(self.free_slots, req.slot)
+        req.slot = None
+        req.state = RequestState.QUEUED
+        req.prefill_pos = 0
+        req.n_preemptions += 1
+        self.queue.append(req)
 
     # -- retirement -------------------------------------------------------
     def retire(self, req: Request, now: float = 0.0) -> None:
@@ -124,6 +360,21 @@ class Scheduler:
         req.state = RequestState.FINISHED
         req.finish_time = now
         req.slot = None
+        self.policy.on_finish(req, now)
+
+    def fail(self, req: Request, now: float = 0.0,
+             error: str = "admission failed") -> None:
+        """Abort a request whose admission/prefill raised: the slot goes
+        back to the free heap (no leak) and the request finishes with
+        ``error`` set instead of wedging the engine."""
+        if req.slot is not None and self.active.get(req.slot) is req:
+            del self.active[req.slot]
+            heapq.heappush(self.free_slots, req.slot)
+        req.slot = None
+        req.state = RequestState.FINISHED
+        req.error = error
+        req.finish_time = now
+        self.policy.on_finish(req, now)
 
     # -- introspection ----------------------------------------------------
     @property

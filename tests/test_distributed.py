@@ -319,3 +319,41 @@ class TestShardedServe:
                 print("PARITY_OK", arch)
         """)
         assert out.count("PARITY_OK") == 2
+
+    def test_sharded_chunked_prefill_token_identical(self):
+        """Chunked prefill over the mesh must match the single-device
+        *unchunked* engine: the carry stays pinned
+        (prefill_carry_shardings) and RoPE runs partition-safe
+        (apply_rope_spmd — rotate-half's split+concat mis-partitions
+        deferred partial sums).  GQA and MLA (latent halves carried
+        separately) both covered."""
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            for arch, quantize in (("llama3-8b", True),
+                                   ("deepseek-v3-671b", False)):
+                cfg = ARCHS[arch].reduced()
+                params = M.init_params(jax.random.key(0), cfg)
+                rng = np.random.default_rng(11)
+                prompts = [rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 15)).tolist()
+                           for _ in range(6)]
+                budgets = [int(rng.integers(2, 8)) for _ in range(6)]
+                ref = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32,
+                    quantize=quantize).generate_all(prompts, budgets)
+                mesh = jax.make_mesh((2, 4), ("data", "model"))
+                rt = Runtime(mesh=mesh, data_axes=("data",),
+                             serve_resident_moe=True)
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32, quantize=quantize,
+                    chunk=4, policy="sjf", rt=rt)
+                got = eng.generate_all(prompts, budgets)
+                assert got == ref, (arch, got, ref)
+                assert eng.stats["chunks"] > len(prompts)
+                print("CHUNK_PARITY_OK", arch)
+        """)
+        assert out.count("CHUNK_PARITY_OK") == 2

@@ -1,0 +1,375 @@
+"""Scheduling-policy framework + chunked-prefill serving pipeline.
+
+Covers the policy layer in isolation (SJF reordering, priority ordering and
+preemptive victim selection, fair-share deficit accounting and quantum
+preemption) and the engine-level properties the chunked pipeline must hold:
+
+* chunked prefill is token-identical to the unchunked engine for every
+  policy and several chunk sizes on a ragged multi-request trace;
+* no engine iteration ever absorbs more prefill tokens than the iteration
+  token budget (the "decode never stalls" property);
+* a preempted request resumes and reproduces its un-preempted output
+  token-for-token (recompute + replay);
+* per-request sampling is deterministic under a seed and greedy at
+  temperature 0;
+* a failed admission returns the slot to the free heap (no slot leak).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.serve.scheduler import (FairSharePolicy, FIFOPolicy,
+                                   PriorityPolicy, Request, RequestState,
+                                   Scheduler, SJFPolicy, make_policy)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _req(rid, plen=4, budget=4, arrival=None, **kw):
+    return Request(rid=rid, prompt=list(range(1, plen + 1)),
+                   max_new_tokens=budget,
+                   arrival_time=float(rid if arrival is None else arrival),
+                   **kw)
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests (no model)
+# ---------------------------------------------------------------------------
+class TestPolicies:
+    def test_make_policy_parsing(self):
+        assert isinstance(make_policy("fifo"), FIFOPolicy)
+        assert isinstance(make_policy("sjf"), SJFPolicy)
+        assert isinstance(make_policy("priority"), PriorityPolicy)
+        p = make_policy("fair:8")
+        assert isinstance(p, FairSharePolicy) and p.quantum == 8
+        assert make_policy("priority:preempt").preemptive
+        inst = SJFPolicy()
+        assert make_policy(inst) is inst
+        with pytest.raises(ValueError):
+            make_policy("lifo")
+
+    def test_sjf_reorders_long_behind_short(self):
+        """A short job queued behind a long one is admitted first."""
+        s = Scheduler(n_slots=1, max_len=64, policy="sjf")
+        long = _req(0, plen=30, budget=20)
+        short = _req(1, plen=4, budget=2)
+        s.submit(long), s.submit(short)
+        assert [r.rid for r in s.admit()] == [1]
+        s.retire(short)
+        assert [r.rid for r in s.admit()] == [0]
+
+    def test_sjf_counts_remaining_work_not_total(self):
+        """A preempted job keeps credit for tokens already generated: a
+        nearly-finished long job (9/10 tokens done) outranks a fresh short
+        one whose full prompt+budget still lies ahead."""
+        a = _req(0, plen=10, budget=10)
+        a.output = list(range(9))
+        a.prefill_pos = 0                 # preempted: prompt recomputed, but
+        b = _req(1, plen=8, budget=4)     # remaining = 10 + (10-9) = 11 < 12
+        s = Scheduler(n_slots=1, max_len=64, policy="sjf")
+        s.queue = [b, a]
+        assert a.remaining_work == 11 and b.remaining_work == 12
+        assert s.policy.select(s.queue, 0.0) is a
+
+    def test_priority_order_and_fifo_tiebreak(self):
+        s = Scheduler(n_slots=2, max_len=32, policy="priority")
+        lo = _req(0, priority=0)
+        hi = _req(1, priority=5)
+        lo2 = _req(2, priority=0)
+        for r in (lo, hi, lo2):
+            s.submit(r)
+        admitted = s.admit()
+        assert [r.rid for r in admitted] == [1, 0]    # hi first, then FIFO
+
+    def test_preemptive_priority_picks_lowest_victim(self):
+        pol = PriorityPolicy(preemptive=True)
+        s = Scheduler(n_slots=2, max_len=32, policy=pol)
+        a, b = _req(0, priority=1), _req(1, priority=3)
+        s.submit(a), s.submit(b)
+        s.admit()
+        urgent = _req(2, priority=9)
+        s.submit(urgent)
+        victims = s.preemption_victims()
+        assert victims == [a]                        # lowest priority bumped
+        s.preempt(victims[0])
+        assert a.state is RequestState.QUEUED and a.slot is None
+        assert a.n_preemptions == 1
+        assert [r.rid for r in s.admit()] == [2]
+        # no preemption when the waiter does not strictly dominate
+        assert s.preemption_victims() == []
+
+    def test_fair_share_deficit_admission(self):
+        """A flood from user A cannot starve user B: after A's first
+        request is served, B's (later-arriving) request is admitted before
+        the rest of the flood."""
+        pol = FairSharePolicy(quantum=32)
+        s = Scheduler(n_slots=1, max_len=32, policy=pol)
+        flood = [_req(i, user="A") for i in range(4)]
+        late = _req(9, user="B", arrival=9.0)
+        for r in flood:
+            s.submit(r)
+        s.submit(late)
+        first = s.admit()[0]
+        assert first.user == "A"                     # served[A]==served[B]==0, FIFO
+        pol.on_tokens(first, 4)
+        s.retire(first)
+        assert s.admit()[0] is late                  # B's deficit wins the slot
+
+    def test_fair_share_quantum_preemption(self):
+        pol = FairSharePolicy(quantum=3)
+        s = Scheduler(n_slots=1, max_len=32, policy=pol)
+        a = _req(0, user="A", budget=20)
+        b = _req(1, user="B", budget=20)
+        s.submit(a), s.submit(b)
+        s.admit()
+        for _ in range(3):                           # a generates its quantum
+            a.output.append(7)
+            pol.on_tokens(a, 1)
+        a.state = RequestState.DECODING
+        assert s.preemption_victims() == [a]
+        # equal service -> no ping-pong
+        pol.on_tokens(b, 3)
+        assert s.preemption_victims() == []
+
+    def test_scheduler_fail_returns_slot(self):
+        s = Scheduler(n_slots=1, max_len=32)
+        r = _req(0)
+        s.submit(r)
+        s.admit()
+        assert not s.free_slots
+        s.fail(r, 1.0, error="boom")
+        assert s.free_slots == [0]
+        assert r.done and r.error == "boom" and r.slot is None
+
+
+# ---------------------------------------------------------------------------
+# engine-level properties (reduced GQA model)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = ARCHS["llama3-8b"].reduced()
+    from repro.models import model as M
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg, n=6, seed=11):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, int(l)).tolist()
+               for l in rng.integers(3, 16, size=n)]
+    budgets = [int(b) for b in rng.integers(2, 9, size=n)]
+    return prompts, budgets
+
+
+class TestChunkedPrefillParity:
+    def test_every_policy_and_chunk_matches_unchunked(self, gqa_setup):
+        """Acceptance: chunked outputs are token-identical to the unchunked
+        engine for every policy, two chunk sizes, on a ragged 6-request
+        trace through 2 slots (queueing + backfill exercised), and no
+        iteration's prefill work exceeds the token budget."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, budgets = _trace(cfg)
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all(prompts, budgets)
+        longest = max(len(p) for p in prompts)
+        for policy in ("fifo", "priority", "sjf", "fair"):
+            for chunk in (3, 7):
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=2, max_len=32, policy=policy,
+                    chunk=chunk)
+                got = eng.generate_all(prompts, budgets)
+                assert got == ref, (policy, chunk)
+                # decode never stalls behind a full-prompt prefill
+                assert eng.stats["max_step_prefill_tokens"] \
+                    <= eng.max_step_tokens
+                assert eng.stats["max_step_prefill_tokens"] < longest
+                assert eng.stats["chunks"] > len(prompts)   # chunking happened
+
+    def test_prefill_progress_is_visible_across_steps(self, gqa_setup):
+        """PREFILLING carries progress: with a tight budget a long prompt
+        stays PREFILLING across iterations, its cursor advancing, while
+        decode keeps running for the resident request."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=48,
+                                       chunk=4, max_step_tokens=6)
+        a = eng.submit(list(range(1, 5)), 12)     # short: resident quickly
+        eng.step()
+        assert a.state is RequestState.DECODING
+        b = eng.submit(list(range(1, 17)), 4)     # 16-token prompt
+        cursors = []
+        while b.state is not RequestState.DECODING:
+            before = len(a.output)
+            eng.step()
+            cursors.append(b.prefill_pos)
+            if a.state is RequestState.DECODING:
+                assert len(a.output) == before + 1   # decode never stalled
+        assert len(cursors) >= 3                      # took several iterations
+        assert cursors == sorted(cursors)
+        eng.drain()
+        assert len(b.output) == 4
+
+    def test_ssm_stack_falls_back_to_exact_length(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        from repro.models import model as M
+        cfg = ARCHS["mamba2-2.7b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                       chunk=4)
+        assert eng.chunk is None                 # recurrent-state boundary
+        prompts, budgets = _trace(cfg, n=3)
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all(prompts, budgets)
+        assert eng.generate_all(prompts, budgets) == ref
+
+
+class TestPreemptionResume:
+    def test_preempted_request_reproduces_unpreempted_output(self, gqa_setup):
+        """Fair-share quantum preemption bumps the long request mid-decode;
+        after resuming (re-prefill + replay) its final output equals the
+        uncontended run token-for-token."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=48).generate_all([prompts[0]], [14])[0]
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="fair:3", chunk=4)
+        r1 = eng.submit(prompts[0], 14, user="A")
+        r2 = eng.submit(prompts[1], 6, user="B")
+        eng.drain()
+        assert r1.n_preemptions >= 1             # quantum time-slicing fired
+        assert r1.output == solo                  # token-for-token resume
+        assert len(r2.output) == 6
+
+    def test_preemptive_priority_resume_atomic_path(self, gqa_setup):
+        """Same resume guarantee on the unchunked engine, via preemptive
+        priority: a high-priority arrival bumps the resident."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=48).generate_all([prompts[2]], [10])[0]
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="priority:preempt")
+        lo = eng.submit(prompts[2], 10, priority=0)
+        for _ in range(3):
+            eng.step()
+        hi = eng.submit(prompts[3], 3, priority=9)
+        eng.drain()
+        assert lo.n_preemptions >= 1
+        assert lo.output == solo
+        assert len(hi.output) == 3
+
+
+class TestPerRequestSampling:
+    def test_seeded_sampling_is_deterministic(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg, n=4)
+
+        def run():
+            eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32)
+            reqs = [eng.submit(p, 6, temperature=0.8, top_k=16, seed=100 + i)
+                    for i, p in enumerate(prompts[:4])]
+            eng.drain()
+            return [r.output for r in reqs]
+
+        a, b = run(), run()
+        assert a == b                             # same seeds, same tokens
+
+    def test_temperature_zero_matches_greedy_and_mixed_batch(self, gqa_setup):
+        """temperature=0 rows are greedy argmax even when other slots
+        sample, so a mixed batch keeps greedy requests reproducible."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg, n=4)
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all([prompts[0]], [6])[0]
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32)
+        greedy = eng.submit(prompts[0], 6, temperature=0.0)
+        sampled = eng.submit(prompts[1], 6, temperature=1.2, seed=7)
+        eng.drain()
+        assert greedy.output == ref
+        assert len(sampled.output) == 6
+
+    def test_sampling_survives_preemption(self, gqa_setup):
+        """A sampled request that gets preempted replays its RNG stream and
+        reproduces the uncontended sampled output."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo_eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48)
+        solo = solo_eng.submit(prompts[0], 12, temperature=0.9, seed=42)
+        solo_eng.drain()
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="fair:3")
+        r1 = eng.submit(prompts[0], 12, temperature=0.9, seed=42, user="A")
+        r2 = eng.submit(prompts[1], 4, user="B")
+        eng.drain()
+        assert r1.n_preemptions >= 1
+        assert r1.output == solo.output
+
+    def test_bad_sampling_params_rejected(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32)
+        with pytest.raises(ValueError):
+            eng.submit([1, 2], 2, temperature=-1.0)
+        with pytest.raises(ValueError):
+            eng.submit([1, 2], 2, top_k=0)
+
+
+class TestAdmissionExceptionSafety:
+    def test_failed_prefill_frees_slot_and_serving_continues(self, gqa_setup):
+        """An exception inside admission (e.g. prefill OOM / compile error)
+        must return the slot to the free heap and fail the request instead
+        of wedging the engine."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg, n=3)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32)
+        real_prefill = eng._prefill
+        calls = {"n": 0}
+
+        def exploding(p, b):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("RESOURCE_EXHAUSTED: synthetic OOM")
+            return real_prefill(p, b)
+
+        eng._prefill = exploding
+        bad = eng.submit(prompts[0], 4)
+        ok = eng.submit(prompts[1], 3)
+        eng.drain()
+        assert bad.done and "RESOURCE_EXHAUSTED" in bad.error
+        assert bad.slot is None
+        assert sorted(eng.scheduler.free_slots) == [0]     # no slot leak
+        assert ok.done and ok.error is None and len(ok.output) == 3
+
+    def test_failed_chunk_frees_slot_and_carry(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg, n=3)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32,
+                                       chunk=4)
+        real_chunk = eng._chunk_fn
+        calls = {"n": 0}
+
+        def exploding(p, c, t, n):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("synthetic chunk failure")
+            return real_chunk(p, c, t, n)
+
+        eng._chunk_fn = exploding
+        bad = eng.submit(prompts[0], 4)
+        ok = eng.submit(prompts[1], 3)
+        eng.drain()
+        assert bad.done and bad.error is not None
+        assert not eng._carries                            # carry dropped
+        assert sorted(eng.scheduler.free_slots) == [0]
+        assert ok.done and ok.error is None and len(ok.output) == 3
