@@ -11,11 +11,17 @@ chunked prefill, so ``max_pf/step`` is bounded by the iteration token
 budget instead of the longest prompt: no decode iteration ever stalls
 behind a full-prompt prefill.
 
+With ``--spec-k 0,2,4,8`` every policy is additionally swept through the
+speculative decode lane (draft k tokens, one batched verify step per
+iteration): each record reports the draft acceptance rate and the TPOT
+speedup relative to that policy's non-speculative (k=0) run — the paper's
+per-token weight-read amortization, measured end to end.
+
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
           [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4] \
           [--policies fifo,sjf,priority,fair] [--chunk 8] \
-          [--max-step-tokens 12] [--mesh 2x4] \
-          [--json BENCH_serve_throughput.json]
+          [--max-step-tokens 12] [--spec-k 0,2,4,8] [--drafter ngram] \
+          [--mesh 2x4] [--json BENCH_serve_throughput.json]
 
 ``--json`` writes the summary record CI uploads as a workflow artifact
 (the ``BENCH_*.json`` perf trajectory): one record per policy under
@@ -49,6 +55,17 @@ def build_trace(rng, n, rate, max_prompt, max_new, n_users=4):
     return arrivals, prompts, budgets, priorities, users
 
 
+def _cell(fmt, v):
+    """One table cell; None (e.g. no acceptance data, no speedup baseline)
+    prints as '-' at the column's width."""
+    if v is not None:
+        return fmt % v
+    width = "".join(ch for ch in fmt[1:].split(".")[0] if ch.isdigit())
+    dash = "-"
+    return dash.ljust(int(width)) if fmt.startswith("%-") \
+        else dash.rjust(int(width or 1))
+
+
 def percentile(sorted_vals, q):
     if not sorted_vals:
         return float("nan")
@@ -56,12 +73,13 @@ def percentile(sorted_vals, q):
     return sorted_vals[i]
 
 
-def make_engine(cfg, params, args, rt):
+def make_engine(cfg, params, args, rt, spec_k=0):
     max_len = args.max_prompt + args.max_new + 1
     return ContinuousBatchingEngine(
         cfg, params, n_slots=args.slots, max_len=max_len, rt=rt,
         policy=args.policy, chunk=args.chunk,
-        max_step_tokens=args.max_step_tokens)
+        max_step_tokens=args.max_step_tokens,
+        spec_k=spec_k, drafter=args.drafter)
 
 
 def warm_engine(eng, args):
@@ -130,17 +148,28 @@ def summarize(policy, eng, reqs, wall):
         "preemptions": eng.stats["preemptions"],
         "steps": eng.stats["steps"],
         "max_step_prefill_tokens": eng.stats["max_step_prefill_tokens"],
+        # eng.spec_k, not the requested value: the engine zeroes it for
+        # SSM stacks (no rewindable state) and never builds a drafter
+        "spec_k": eng.spec_k,
+        "drafter": eng._drafter.name if eng.spec_k else None,
+        "verify_steps": eng.stats["verify_steps"],
+        # None (JSON null), never NaN, when nothing was drafted
+        "acceptance_rate": (eng.acceptance_rate
+                            if eng.stats["spec_drafted"] else None),
     }
 
 
-COLS = [("policy", "%-16s"), ("throughput_tok_s", "%8.1f"),
+COLS = [("policy", "%-16s"), ("spec_k", "%6d"),
+        ("throughput_tok_s", "%8.1f"),
         ("ttft_p50_ms", "%9.1f"), ("ttft_p99_ms", "%9.1f"),
         ("tpot_p50_ms", "%9.2f"), ("tpot_p99_ms", "%9.2f"),
         ("latency_p99_ms", "%9.1f"), ("queue_delay_p50_ms", "%9.1f"),
         ("queue_delay_p99_ms", "%9.1f"), ("preemptions", "%5d"),
-        ("max_step_prefill_tokens", "%11d")]
-HEAD = ("policy             tok/s  ttft-p50  ttft-p99  tpot-p50  tpot-p99  "
-        " lat-p99  qdel-p50  qdel-p99  prmpt  max_pf/step")
+        ("max_step_prefill_tokens", "%11d"),
+        ("acceptance_rate", "%7.2f"), ("tpot_speedup", "%8.2f")]
+HEAD = ("policy            spec_k     tok/s  ttft-p50  ttft-p99  tpot-p50  "
+        "tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  max_pf/step  "
+        " accept  speedup")
 
 
 def main():
@@ -160,6 +189,12 @@ def main():
                     help="chunked prefill size (None = atomic prefills)")
     ap.add_argument("--max-step-tokens", type=int, default=None,
                     help="per-iteration token budget (default slots + chunk)")
+    ap.add_argument("--spec-k", default="0", metavar="K[,K...]",
+                    help="speculative decode draft lengths to sweep, e.g. "
+                         '"0,2,4,8" (0 = the non-speculative baseline the '
+                         "TPOT speedup column is relative to)")
+    ap.add_argument("--drafter", default="ngram",
+                    help="draft proposer: ngram[:N] | mtp")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -185,17 +220,31 @@ def main():
           f"rate={args.rate}/s prompts 4..{args.max_prompt} "
           f"new {max(1, args.max_new//2)}..{args.max_new} "
           f"chunk={args.chunk} budget={args.max_step_tokens}")
+    spec_ks = [int(s) for s in args.spec_k.split(",")]
     print(HEAD)
     records = {}
     for pol in policies:
         args.policy = pol
-        eng = make_engine(cfg, params, args, rt)
-        warm_engine(eng, args)
-        reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
-                                  priorities, users)
-        rec = summarize(pol, eng, reqs, wall)
-        records[pol] = rec
-        print("  ".join(fmt % rec[k] for k, fmt in COLS))
+        recs = []
+        for K in spec_ks:
+            eng = make_engine(cfg, params, args, rt, spec_k=K)
+            warm_engine(eng, args)
+            reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
+                                      priorities, users)
+            recs.append(summarize(pol, eng, reqs, wall))
+        # speedup baseline: the k=0 record wherever it sits in the sweep
+        # (None — JSON null — when the sweep has no baseline or NaN TPOTs)
+        base = next((r for r in recs if r["spec_k"] == 0), None)
+        base_tpot = base["tpot_p50_ms"] if base else None
+        if base_tpot is None or base_tpot != base_tpot:
+            base_tpot = None
+        for rec in recs:
+            tpot = rec["tpot_p50_ms"]
+            rec["tpot_speedup"] = (base_tpot / tpot
+                                   if base_tpot and tpot == tpot else None)
+            K = rec["spec_k"]
+            records[pol if K == 0 else f"{pol}@spec{K}"] = rec
+            print("  ".join(_cell(fmt, rec[k]) for k, fmt in COLS))
 
     if args.json:
         out = {"bench": "serve_throughput", "arch": cfg.name,
@@ -203,6 +252,7 @@ def main():
                "rate_req_s": args.rate, "mesh": args.mesh,
                "seed": args.seed, "chunk": args.chunk,
                "max_step_tokens": args.max_step_tokens,
+               "spec_k": spec_ks, "drafter": args.drafter,
                "policies": records}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

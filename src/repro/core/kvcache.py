@@ -141,6 +141,21 @@ def bump_length(cache, n: jax.Array | int = 1):
     return dataclasses.replace(cache, lengths=cache.lengths + n)
 
 
+def rewind_lengths(cache, lengths: jax.Array):
+    """Speculative-decode rollback on the reference cache: set each slot's
+    length to its committed prefix ([B] int32).  The rejected-suffix int8
+    rows past the new length are *not* erased — they are dead entries the
+    attention mask hides, overwritten in place by the next append (the SLC
+    write-in-place discipline that makes rollback a free cursor move).
+
+    Like the rest of this dataclass API (``alloc_slot``/``free_slot``/
+    ``bump_length``) this is the property-tested *reference model* of the
+    discipline; the serve engine's production rollback is the same cursor
+    move on the pooled decode state (``transformer.rewind_pos``)."""
+    return dataclasses.replace(
+        cache, lengths=jnp.asarray(lengths, jnp.int32))
+
+
 def alloc_slot(cache, slot: jax.Array | int, length: jax.Array | int):
     """Claim ``slot`` for a request whose prompt occupies ``length`` tokens."""
     return dataclasses.replace(

@@ -313,6 +313,21 @@ def prefill_carry_shardings(cfg: ModelConfig, carry_abs: Any, mesh):
     return walk(carry_abs, [])
 
 
+def verify_shardings(n_slots: int, mesh) -> dict:
+    """Speculative verify-step I/O shardings, pinned like the decode pool:
+    the slot axis of the [B, T] draft tokens, [B, T, V] logits and
+    [B, T, d] hidden carry shards over the data axes (T — the verify
+    window — and vocab/model dims replicate).  Pinning these beside the
+    pool's ``decode_state_shardings`` keeps the jitted verify step from
+    migrating the SLC pool on any draft-length path."""
+    b = batch_entry(n_slots, mesh)
+    return {
+        "tokens": NamedSharding(mesh, P(b, None)),
+        "logits": NamedSharding(mesh, P(b, None, None)),
+        "hidden": NamedSharding(mesh, P(b, None, None)),
+    }
+
+
 def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
                            state_abs: Any, mesh):
     """Slot-pool decode state: the batch/slot axis (dim 1 of every cache

@@ -30,7 +30,13 @@ NEG_INF = -1e30
 
 
 def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, d: int):
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, d: int,
+            t: int, rep: int):
+    """``t`` query tokens per (batch, group): the plain decode step is
+    ``t == 1``; the speculative verify step folds its T draft positions
+    into the row axis ([t*rep, D] q block) with a *per-row* key limit —
+    row ``r`` (draft position ``r // rep``) masks keys to
+    ``len_ref[b, r // rep]``, the verify window's stepped causal mask."""
     b_idx = pl.program_id(0)
     s_idx = pl.program_id(2)
 
@@ -40,14 +46,18 @@ def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[...].astype(jnp.int32)                 # [rep, D]
+    q = q_ref[...].astype(jnp.int32)                 # [t*rep, D]
     k = k_ref[...].astype(jnp.int32)                 # [bs, D]
     s_int = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.int32)  # [rep, bs]
+                                preferred_element_type=jnp.int32)  # [t*rep, bs]
     scores = (s_int.astype(jnp.float32) * qs_ref[...]
               * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
     pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    scores = jnp.where(pos < len_ref[b_idx], scores, NEG_INF)
+    # per-row limit: t scalar SMEM reads (t is small and static), spread
+    # over each draft position's `rep` query rows
+    lim = jnp.stack([len_ref[b_idx, i] for i in range(t)]).reshape(t, 1)
+    lim = jnp.broadcast_to(lim, (t, rep)).reshape(t * rep, 1)
+    scores = jnp.where(pos < lim, scores, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
     m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
@@ -65,6 +75,39 @@ def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, lengths, *, t: int, rep: int,
+                 bs: int, interpret: bool):
+    """Shared launch: q_q/q_s rows are [t*rep, ...]; lengths is [B, t]."""
+    B, G, R, D = q_q.shape
+    S = k_q.shape[1]
+    bs = min(bs, S)
+    n_s = pl.cdiv(S, bs)
+    grid = (B, G, n_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s, bs=bs, d=D, t=t, rep=rep),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # lengths
+            pl.BlockSpec((None, None, R, D), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, R, 1), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+        ],
+        out_specs=pl.BlockSpec((None, None, R, D), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, R, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(lengths, q_q, q_s, k_q, k_s, v_q, v_s)
+
+
 @functools.partial(jax.jit, static_argnames=("bs", "interpret"))
 def decode_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, length, *,
                        bs: int = BLOCK_S, interpret: bool = True):
@@ -72,30 +115,24 @@ def decode_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, length, *,
     k_s/v_s: [B,S,G] f32; length: [B] (or [1], broadcast) int32 per-slot
     cache lengths -> out [B,G,rep,D] f32."""
     B, G, rep, D = q_q.shape
-    S = k_q.shape[1]
-    bs = min(bs, S)
-    n_s = pl.cdiv(S, bs)
-    grid = (B, G, n_s)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_s=n_s, bs=bs, d=D),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                  # length
-            pl.BlockSpec((None, None, rep, D), lambda b, g, s: (b, g, 0, 0)),
-            pl.BlockSpec((None, None, rep, 1), lambda b, g, s: (b, g, 0, 0)),
-            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
-            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
-            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
-            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
-        ],
-        out_specs=pl.BlockSpec((None, None, rep, D), lambda b, g, s: (b, g, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, G, rep, D), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, D), jnp.float32),
-        ],
-        interpret=interpret,
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(length, q_q, q_s, k_q, k_s, v_q, v_s)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1, 1),
+                               (B, 1))
+    return _attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, lengths,
+                        t=1, rep=rep, bs=bs, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def verify_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, lengths, *,
+                       bs: int = BLOCK_S, interpret: bool = True):
+    """Speculative-verify flash decoding: q_q: [B,G,T,rep,D] int8 (T = the
+    last committed token + drafts per slot); lengths: [B,T] int32 per-row
+    key limits (``pos + t + 1``) -> out [B,G,T,rep,D] f32.  T folds into
+    the q row axis, so the dMVM dataflow is the T=1 kernel's with a
+    stepped per-row mask."""
+    B, G, T, rep, D = q_q.shape
+    out = _attn_pallas(q_q.reshape(B, G, T * rep, D),
+                       q_s.reshape(B, G, T * rep, 1),
+                       k_q, k_s, v_q, v_s,
+                       jnp.asarray(lengths, jnp.int32),
+                       t=T, rep=rep, bs=bs, interpret=interpret)
+    return out.reshape(B, G, T, rep, D)

@@ -18,6 +18,12 @@ iteration):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --continuous --chunk 8 --policy sjf --requests 16 --slots 4
 
+Speculative decode (draft ``K`` tokens per slot, verify all K+1 positions
+in one batched step, roll rejected suffixes back via a cursor rewind):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --continuous --chunk 4 --spec-k 4 --drafter ngram
+
 Either mode accepts ``--mesh DxM`` to serve over a (data, model) device
 mesh (slot pool over data axes, experts/FFN over model; see
 ``dist/sharding.py``).  On a CPU box, force host devices first:
@@ -84,7 +90,8 @@ def _run_continuous(cfg, params, args):
                                    rt=make_serve_runtime(args.mesh),
                                    quantize=not args.no_quantize,
                                    policy=args.policy, chunk=args.chunk,
-                                   max_step_tokens=args.max_step_tokens)
+                                   max_step_tokens=args.max_step_tokens,
+                                   spec_k=args.spec_k, drafter=args.drafter)
     prompts = [rng.integers(0, cfg.vocab_size,
                             rng.integers(4, args.prompt_len + 1)).tolist()
                for _ in range(args.requests)]
@@ -108,6 +115,10 @@ def _run_continuous(cfg, params, args):
     print(f"steps={eng.stats['steps']} chunks={eng.stats['chunks']} "
           f"preemptions={eng.stats['preemptions']} "
           f"max prefill tokens/step={eng.stats['max_step_prefill_tokens']}")
+    if eng.spec_k:
+        print(f"spec: k={eng.spec_k} drafter={eng._drafter.name} "
+              f"verify_steps={eng.stats['verify_steps']} "
+              f"acceptance={eng.acceptance_rate:.2%}")
     print("sample tokens:", reqs[0].output[:10])
 
 
@@ -132,6 +143,13 @@ def main():
     ap.add_argument("--max-step-tokens", type=int, default=None,
                     help="per-iteration token budget (decode slots + prefill "
                          "chunk tokens); default slots + chunk")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="speculative decode: draft K tokens per slot and "
+                         "verify all K+1 positions in one batched step "
+                         "(0 = off)")
+    ap.add_argument("--drafter", default="ngram",
+                    help='draft proposer: ngram[:N] (prompt lookup) | mtp '
+                         '(multi-token-prediction head, cfg.mtp archs)')
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=None)

@@ -264,6 +264,89 @@ def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def verify_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, pos: jax.Array,
+                          backend: str = "dense",
+                          inter_dtype=jnp.float32) -> jax.Array:
+    """Speculative-verify attention: ``q`` is [B, T, H, D] — T query tokens
+    per slot sitting at positions ``pos[b] .. pos[b]+T-1`` (the last
+    committed token plus T-1 drafts); cache layout as in
+    :func:`decode_attention_int8`.
+
+    Query ``t`` of slot ``b`` attends keys ``[0, pos[b]+t]`` — the per-row
+    causal mask that makes one batched pass score every draft position
+    exactly as T sequential decode steps would.  The T axis folds into the
+    GQA ``rep`` axis so the integer dMVM einsums are *structurally
+    identical* to the T=1 decode: int8xint8 scores are exact integer
+    arithmetic, so acceptance decisions match step-by-step decode
+    bit-for-bit.
+    """
+    B, T, H, D = q.shape
+    pos_b = KV.slot_positions(pos, B)
+    if backend in ("fused_int8", "pallas"):
+        from repro.kernels.decode_attn import ops as da_ops
+        return da_ops.verify_attention(q, k_q, k_s, v_q, v_s, pos_b)
+    G = k_q.shape[2]
+    rep = H // G
+    q_q, q_scale = quant.quantize_kv(q.reshape(B, T * H, D))  # per-(B,T,H)
+    q_q = (q_q.reshape(B, T, G, rep, D).transpose(0, 2, 1, 3, 4)
+           .reshape(B, G, T * rep, D))
+    q_scale = (q_scale.reshape(B, T, G, rep, 1).transpose(0, 2, 1, 3, 4)
+               .reshape(B, G, T * rep, 1))
+    s_int = jnp.einsum("bgrd,bsgd->bgrs", q_q, k_q,
+                       preferred_element_type=jnp.int32)
+    k_sc = k_s[..., 0].transpose(0, 2, 1)[:, :, None, :]   # [B,G,1,S]
+    scores = s_int.astype(jnp.float32) * q_scale * k_sc / math.sqrt(D)
+    S = k_q.shape[1]
+    # row r = (t, rep) attends keys [0, pos + t]
+    t_of_row = jnp.arange(T * rep) // rep
+    limit = pos_b[:, None, None, None] + t_of_row[None, None, :, None] + 1
+    mask = jnp.arange(S)[None, None, None, :] < limit
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)                    # controller op
+    vf = (v_q.astype(inter_dtype) * v_s.astype(inter_dtype))
+    o = jnp.einsum("bgrs,bsgd->bgrd", w.astype(inter_dtype), vf,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, G, T, rep, D).transpose(0, 2, 1, 3, 4)
+    return o.reshape(B, T, H, D).astype(q.dtype)
+
+
+def gqa_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               k_q, k_s, v_q, v_s, backend: str = "dense",
+               inter_dtype=jnp.float32):
+    """Multi-token decode for the speculative verify step: consume ``x``
+    ([B, T, d], the last committed token plus T-1 drafts per slot) at each
+    slot's cursor.  The T tokens' int8 K/V land at the per-slot offset in
+    one multi-token :func:`KV.batched_update` — the same SLC append
+    discipline chunked prefill uses (:func:`KV.chunk_update`), vectorised
+    over slots — and all T positions are scored in one pass.  K/V rows and
+    integer scores are bit-identical to T sequential :func:`gqa_decode`
+    calls, which is what makes greedy speculative decode token-identical
+    to the plain engine."""
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    pos_b = KV.slot_positions(pos, B)
+    q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, T, cfg.n_heads, hd)
+    k = L.apply_linear(L._lin(p, "wk"), x, backend).reshape(B, T, cfg.n_kv_heads, hd)
+    v = L.apply_linear(L._lin(p, "wv"), x, backend).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q)
+        k = L.apply_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        pp = pos_b[:, None] + jnp.arange(T)[None, :]
+        q = L.apply_rope(q, pp, cfg.rope_theta)
+        k = L.apply_rope(k, pp, cfg.rope_theta)
+    kq_new, ks_new = quant.quantize_kv(k)
+    vq_new, vs_new = quant.quantize_kv(v)
+    k_q = KV.batched_update(k_q, kq_new, pos_b)
+    k_s = KV.batched_update(k_s, ks_new, pos_b)
+    v_q = KV.batched_update(v_q, vq_new, pos_b)
+    v_s = KV.batched_update(v_s, vs_new, pos_b)
+    o = verify_attention_int8(q, k_q, k_s, v_q, v_s, pos_b, backend,
+                              inter_dtype)
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
+    return out, (k_q, k_s, v_q, v_s)
+
+
 def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                k_q, k_s, v_q, v_s, backend: str = "dense",
                inter_dtype=jnp.float32):
@@ -300,6 +383,15 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3): compressed-latent cache; absorbed decode
 # ---------------------------------------------------------------------------
+def _quantize_latent(latent: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token symmetric int8 for the MLA latent rows ([..., r+dr]).
+    Shared by decode and verify so their SLC rows stay bit-identical —
+    the speculative lane's acceptance test depends on it."""
+    amax = jnp.max(jnp.abs(latent.astype(jnp.float32)), axis=-1, keepdims=True)
+    sc = jnp.maximum(amax, 1e-8) / 127.0
+    lq = jnp.clip(jnp.round(latent / sc.astype(latent.dtype)),
+                  -127, 127).astype(jnp.int8)
+    return lq, sc
 def mla_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                 backend: str = "dense", lengths: jax.Array | None = None):
     """Training/prefill MLA.  Returns (out, latent) where latent =
@@ -347,10 +439,7 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     c_new = L.apply_norm(p["kv_norm"], kv_a[..., :r])
     k_rope_new = L.apply_rope(kv_a[:, :, None, r:], pp, cfg.rope_theta)[:, :, 0, :]
     latent_new = jnp.concatenate([c_new, k_rope_new], axis=-1)      # [B,1,r+dr]
-    amax = jnp.max(jnp.abs(latent_new.astype(jnp.float32)), axis=-1, keepdims=True)
-    sc = jnp.maximum(amax, 1e-8) / 127.0
-    lq = jnp.clip(jnp.round(latent_new / sc.astype(latent_new.dtype)),
-                  -127, 127).astype(jnp.int8)
+    lq, sc = _quantize_latent(latent_new)
     c_q = KV.batched_update(c_q, lq, pos_b)
     c_s = KV.batched_update(c_s, sc, pos_b)
 
@@ -373,5 +462,55 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                        preferred_element_type=jnp.float32)          # latent-space SV
     o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32)) # expand W_UV
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, 1, -1).astype(x.dtype),
+                         backend)
+    return out, (c_q, c_s)
+
+
+def mla_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               c_q: jax.Array, c_s: jax.Array, backend: str = "dense",
+               inter_dtype=jnp.float32):
+    """Absorbed MLA decode over T tokens per slot — the speculative verify
+    sibling of :func:`mla_decode`.  The T compressed latents append at the
+    per-slot cursor (multi-token :func:`KV.batched_update`); query ``t``
+    masks the latent cache to ``[0, pos[b]+t]``, so all T positions score
+    against exactly the prefix T sequential decode steps would see."""
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pos_b = KV.slot_positions(pos, B)
+    pp = pos_b[:, None] + jnp.arange(T)[None, :]
+    q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
+    q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, pp, cfg.rope_theta)
+
+    kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
+    c_new = L.apply_norm(p["kv_norm"], kv_a[..., :r])
+    k_rope_new = L.apply_rope(kv_a[:, :, None, r:], pp, cfg.rope_theta)[:, :, 0, :]
+    latent_new = jnp.concatenate([c_new, k_rope_new], axis=-1)      # [B,T,r+dr]
+    lq, sc = _quantize_latent(latent_new)
+    c_q = KV.batched_update(c_q, lq, pos_b)
+    c_s = KV.batched_update(c_s, sc, pos_b)
+
+    wkv_b = (p["wkv_b"] if "wkv_b" in p else
+             (p["wkv_b_q"].astype(jnp.float32) * p["wkv_b_s"])).reshape(r, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_eff = jnp.einsum("bthd,rhd->bthr", q_nope.astype(inter_dtype),
+                       w_uk.astype(inter_dtype))
+    cache = c_q.astype(inter_dtype) * c_s.astype(inter_dtype)       # [B,S,r+dr]
+    scores = (jnp.einsum("bthr,bsr->bths", q_eff, cache[..., :r],
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bthd,bsd->bths", q_rope.astype(inter_dtype),
+                         cache[..., r:], preferred_element_type=jnp.float32))
+    scores = scores / math.sqrt(dn + dr)
+    S = c_q.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] < (pp + 1)[:, :, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bths,bsr->bthr", w.astype(inter_dtype), cache[..., :r],
+                       preferred_element_type=jnp.float32)
+    o = jnp.einsum("bthr,rhd->bthd", o_lat, w_uv.astype(jnp.float32))
+    out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1).astype(x.dtype),
                          backend)
     return out, (c_q, c_s)

@@ -128,6 +128,24 @@ def decode_step(params, cfg: ModelConfig, state: dict, token, rt: Runtime):
     return T.decode_step(params, cfg, state, token, rt)
 
 
+def verify_step(params, cfg: ModelConfig, state: dict, tokens, rt: Runtime):
+    """Speculative-decode verify: ``tokens`` [B, T] (last committed token +
+    T-1 drafts per slot) -> (logits [B, T, V], hidden [B, T, d], state with
+    ``pos + T``).  Decoder-only attention stacks; see
+    :func:`repro.models.transformer.verify_step`."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("speculative decode targets decoder-only LMs")
+    return T.verify_step(params, cfg, state, tokens, rt)
+
+
+def mtp_draft(params, cfg: ModelConfig, hidden, token, pos, k: int,
+              rt: Runtime):
+    """Draft ``k`` tokens per slot from the MTP head (requires ``cfg.mtp``)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("speculative decode targets decoder-only LMs")
+    return T.mtp_draft(params, cfg, hidden, token, pos, k, rt)
+
+
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.family == "encdec":
         return encdec.init_decode_state(cfg, batch, max_len)

@@ -398,6 +398,137 @@ def decode_step(p: Params, cfg: ModelConfig, state: dict, token: jax.Array,
     return logits, {"groups": tuple(new_groups), "pos": pos + 1}
 
 
+# ---------------------------------------------------------------------------
+# speculative decode: batched multi-token verify + cursor rollback + MTP draft
+# ---------------------------------------------------------------------------
+def apply_layer_verify(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
+                       rt: Runtime):
+    """One layer of the speculative verify pass: like
+    :func:`apply_layer_decode` but over ``x`` [B, T, d] (T = 1 + drafted
+    tokens per slot), appending T K/V rows at the per-slot cursor."""
+    dmvm_dt = rt.dmvm_dtype or jnp.float32
+    h = L.apply_norm(p["ln1"], x)
+    if cfg.attn_type == "mla":
+        mix, (c_q, c_s) = A.mla_verify(p["attn"], cfg, h, pos, cache["c_q"],
+                                       cache["c_s"], rt.backend, dmvm_dt)
+        new_cache = {"c_q": c_q, "c_s": c_s}
+    else:
+        mix, (k_q, k_s, v_q, v_s) = A.gqa_verify(
+            p["attn"], cfg, h, pos, cache["k_q"], cache["k_s"], cache["v_q"],
+            cache["v_s"], rt.backend, dmvm_dt)
+        new_cache = {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}
+    x = x + mix
+    if "moe" in p:
+        mo, _ = _moe_block(p["moe"], L.apply_norm(p["ln2"], x), cfg, rt)
+        x = x + mo
+    elif "mlp" in p:
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x), cfg.mlp_type,
+                            rt.backend)
+    return x, new_cache
+
+
+def verify_step(p: Params, cfg: ModelConfig, state: dict, tokens: jax.Array,
+                rt: Runtime) -> tuple[jax.Array, jax.Array, dict]:
+    """Speculative-decode verify: feed ``tokens`` [B, T] (per slot: the last
+    committed token plus T-1 drafted tokens) at each slot's cursor in one
+    batched pass.
+
+    Returns ``(logits [B, T, V], hidden [B, T, d], new state)`` — row ``i``
+    of ``logits`` is the model's next-token distribution after consuming
+    ``tokens[:, :i+1]``, exactly what ``i+1`` sequential
+    :func:`decode_step` calls would produce, so greedy acceptance is
+    lossless.  ``hidden`` is the post-``ln_f`` hidden state per position
+    (the MTP drafter's recursion carry).  The returned state has
+    ``pos + T`` and all T K/V rows appended; the caller commits an accepted
+    prefix by *rewinding* the cursor (:func:`rewind_pos`) — rejected-suffix
+    rows stay in the SLC region as dead entries that the position mask
+    hides and the next in-place append overwrites (no erase cycle).
+
+    Attention-family stacks only: an SSM layer's recurrent state cannot be
+    rewound without checkpointing, so SSM/hybrid engines keep the plain
+    one-token decode loop.
+    """
+    if any(cfg.layer_kind(i) == "ssm" for i in range(cfg.n_layers)):
+        raise NotImplementedError(
+            "speculative verify needs a rewindable cache; SSM/hybrid stacks "
+            "keep the one-token decode path (see serve engine)")
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(state["pos"], jnp.int32), (B,))
+    x = p["embed"]["w"][tokens]
+    if not cfg.rope_theta:
+        pp = pos[:, None] + jnp.arange(T)[None, :]
+        x = x + _sinusoid_at(pp, cfg.d_model).astype(x.dtype)
+    new_groups = []
+    for (start, count, period), slots, caches in zip(
+            layer_groups(cfg), p["groups"], state["groups"]):
+        n_p = jax.tree.leaves(slots[0])[0].shape[0]
+
+        def body(carry, xs):
+            xx, full_caches = carry
+            slot_trees, idx = xs
+            new_full = []
+            for s in range(period):
+                cache_s = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                           keepdims=False),
+                    full_caches[s])
+                xx, nc = apply_layer_verify(slot_trees[s], cfg, start + s, xx,
+                                            pos, cache_s, rt)
+                new_full.append(jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                        full, new[None].astype(full.dtype), idx, 0),
+                    full_caches[s], nc))
+            return (xx, tuple(new_full)), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            body, (x, caches), (slots, jnp.arange(n_p)))
+        new_groups.append(new_caches)
+    x = L.apply_norm(p["ln_f"], x)
+    logits = _lm_head(p, cfg, x, rt)
+    return logits, x, {"groups": tuple(new_groups), "pos": pos + T}
+
+
+def rewind_pos(state: dict, pos) -> dict:
+    """Speculative-decode rollback: commit each slot's accepted prefix by
+    rewinding its cursor to ``pos`` ([B] int32).  SLC writes are in place,
+    so the rejected suffix needs no erase — its rows are dead (masked by
+    ``pos``) until the next append overwrites them."""
+    return {"groups": state["groups"], "pos": jnp.asarray(pos, jnp.int32)}
+
+
+def mtp_draft(p: Params, cfg: ModelConfig, hidden: jax.Array,
+              token: jax.Array, pos: jax.Array, k: int,
+              rt: Runtime) -> jax.Array:
+    """Draft ``k`` tokens per slot from the MTP head (DeepSeek-V3's depth-1
+    multi-token-prediction module, applied recursively): step ``i``
+    projects ``[h; embed(tok)]`` through ``mtp_proj``/``mtp_layer`` and
+    takes the greedy argmax, feeding the new hidden state forward.
+
+    ``hidden`` [B, d] is the post-``ln_f`` hidden at the last committed
+    position (from :func:`verify_step`; zeros right after prefill — the
+    head free-runs from the embedding alone there).  The draft is
+    single-position (the MTP layer's attention sees only its own token, no
+    KV cache), so it is cheap but approximate — the verify step makes any
+    draft quality lossless; it only costs acceptance rate."""
+    if not cfg.mtp:
+        raise ValueError(f"{cfg.name} has no MTP head (cfg.mtp is False)")
+    drafts = []
+    h = hidden.astype(jnp.float32)
+    tok = jnp.asarray(token, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    for i in range(k):
+        emb = p["embed"]["w"][tok].astype(h.dtype)              # [B, d]
+        hcat = jnp.concatenate([h, emb], axis=-1)
+        hm = L.apply_linear(L._lin(p["mtp_proj"], "w"), hcat, rt.backend)
+        hm3, _ = apply_layer_train(p["mtp_layer"], cfg, cfg.n_layers - 1,
+                                   hm[:, None, :], (pos + i)[:, None], rt)
+        logits = _lm_head(p, cfg, hm3[:, 0], rt)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        drafts.append(tok)
+        h = hm3[:, 0]
+    return jnp.stack(drafts, axis=1)                            # [B, k]
+
+
 def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
     """Sinusoidal embedding at ``pos`` (scalar -> [d]; [B] -> [B, d]) with no
     table materialisation — each slot sits at its own position."""

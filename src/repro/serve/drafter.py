@@ -1,0 +1,107 @@
+"""Draft-token proposers for the speculative decode lane.
+
+The verify step makes *any* drafter lossless — a wrong draft only costs
+acceptance rate, never output correctness — so drafters are free to be
+cheap and approximate.  Two flavours ship:
+
+* :class:`NGramDrafter` (``kind="host"``) — prompt-lookup decoding: the
+  last n-gram of the committed context (prompt + emitted tokens) is looked
+  up at its most recent earlier occurrence and the tokens that followed it
+  are proposed.  Zero model cost, pure host Python, and surprisingly
+  effective whenever generation revisits prompt material or falls into
+  loops (which untrained seed params reliably do — the reason synthetic
+  traces get non-trivial acceptance).
+* :class:`MTPDrafter` (``kind="model"``) — the DeepSeek-V3 multi-token-
+  prediction head (``cfg.mtp``): a jitted batched recursion over
+  ``mtp_proj``/``mtp_layer`` that drafts ``k`` tokens for every slot at
+  once from the last verify step's hidden carry
+  (:func:`repro.models.transformer.mtp_draft`).
+
+``kind`` tells the engine how to call it: "host" drafters expose
+``draft(context, k) -> list[int]`` per request; "model" drafters expose
+``draft_batch(params, hidden, token, pos) -> [n_slots, k]`` over the whole
+pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class Drafter:
+    """Base: subclasses set ``kind`` ("host" | "model") and implement the
+    matching draft method."""
+
+    name = "base"
+    kind = "host"
+
+    def draft(self, context: list[int], k: int) -> list[int]:
+        raise NotImplementedError
+
+    def draft_batch(self, params, hidden, token, pos):
+        raise NotImplementedError
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafting: propose the continuation of the most recent
+    earlier occurrence of the context's trailing n-gram (longest n first),
+    falling back to repeat-last when nothing matches."""
+
+    name = "ngram"
+    kind = "host"
+
+    def __init__(self, max_n: int = 3):
+        if max_n < 1:
+            raise ValueError("ngram drafter needs max_n >= 1")
+        self.max_n = max_n
+
+    def draft(self, context: list[int], k: int) -> list[int]:
+        L = len(context)
+        for n in range(min(self.max_n, L - 1), 0, -1):
+            pat = context[-n:]
+            for i in range(L - n - 1, -1, -1):
+                if context[i:i + n] == pat:
+                    cont = context[i + n:i + n + k]
+                    if cont:
+                        return (cont + [cont[-1]] * k)[:k]
+        return [context[-1]] * k
+
+
+class MTPDrafter(Drafter):
+    """Batched MTP-head drafting over the slot pool.  ``hidden`` is the
+    post-``ln_f`` hidden at each slot's last committed position (zeros
+    right after prefill — the head free-runs from the embedding there)."""
+
+    name = "mtp"
+    kind = "model"
+
+    def __init__(self, cfg: ModelConfig, rt, k: int):
+        if not cfg.mtp:
+            raise ValueError(
+                f"{cfg.name} has no MTP head (cfg.mtp is False); "
+                "use the ngram drafter")
+        from repro.models import model as M
+        self._fn = jax.jit(
+            lambda p, h, t, pos: M.mtp_draft(p, cfg, h, t, pos, k, rt))
+
+    def draft_batch(self, params, hidden, token, pos):
+        return self._fn(params, jnp.asarray(hidden),
+                        jnp.asarray(token, jnp.int32),
+                        jnp.asarray(pos, jnp.int32))
+
+
+def make_drafter(spec: "str | Drafter | None", cfg: ModelConfig, rt,
+                 k: int) -> Drafter:
+    """``"ngram" | "ngram:N" (max n-gram) | "mtp"`` or a built instance."""
+    if spec is None:
+        return NGramDrafter()
+    if isinstance(spec, Drafter):
+        return spec
+    name, _, arg = spec.partition(":")
+    if name == "ngram":
+        return NGramDrafter(max_n=int(arg)) if arg else NGramDrafter()
+    if name == "mtp":
+        return MTPDrafter(cfg, rt, k)
+    raise ValueError(f"unknown drafter {spec!r}; one of ['ngram', 'mtp']")

@@ -21,6 +21,18 @@ prefill tokens (in ``[1, c]`` chunks at the request's ``prefill_pos`` cursor)
 into one engine step, so TPOT of running requests never absorbs a whole
 prompt.  Admission order and preemption are delegated to a pluggable
 ``SchedulingPolicy`` (FIFO / priority / SJF / fair-share).
+
+With ``spec_k=k`` the continuous engine adds a *speculative decode lane*:
+a drafter proposes ``k`` tokens per decoding slot, one batched verify step
+scores all ``k+1`` positions against the pooled SLC cache, and each slot
+commits its accepted prefix while the rejected suffix rolls back via a
+cursor rewind (SLC writes are in place — rollback is free, no erase).  On
+the paper's bandwidth-bound PIM array every decode step pays a full
+weight-read MVM pass, so verifying ``k+1`` tokens per pass amortizes that
+read cost by the acceptance rate.  Greedy speculative output is
+token-identical to the plain engine (the verify logits are bit-identical
+to sequential decode), and sampled requests stay stream-exact: one RNG
+draw per emitted token, acceptance = "draft equals the sampled token".
 """
 from __future__ import annotations
 
@@ -37,9 +49,22 @@ from repro.configs.shapes import ShapeConfig
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.transformer import Runtime
+from repro.serve.drafter import Drafter, make_drafter
 from repro.serve.quantize import quantize_tree
 from repro.serve.scheduler import (Request, RequestState, Scheduler,
                                    SchedulingPolicy)
+
+
+class RequestFailedError(RuntimeError):
+    """Raised by :meth:`ContinuousBatchingEngine.generate_all` when any
+    request finished with ``.error`` set (failed admission/prefill): an
+    empty output must not masquerade as a real empty generation.  The
+    failed requests ride along in ``.failures``."""
+
+    def __init__(self, failures: list[Request]):
+        self.failures = failures
+        super().__init__("; ".join(
+            f"request {r.rid}: {r.error}" for r in failures))
 
 
 def _place_on_mesh(cfg: ModelConfig, params: Any, qparams: Any, rt: Runtime):
@@ -75,7 +100,12 @@ class Engine:
     def generate(self, batch: dict, steps: int, greedy: bool = True,
                  rng: jax.Array | None = None):
         """Prefill the prompt batch then generate ``steps`` tokens.
-        Returns (tokens [B, steps], per-stage timings)."""
+        Returns (tokens [B, steps], per-stage timings).  ``greedy=False``
+        requires an explicit ``rng`` (e.g. ``jax.random.key(0)``)."""
+        if not greedy and rng is None:
+            raise ValueError(
+                "generate(greedy=False) needs a sampling rng; passing none "
+                "used to silently fall back to greedy argmax")
         t0 = time.perf_counter()
         logits, state = self._prefill(self.params, batch)
         logits = jax.block_until_ready(logits)
@@ -87,7 +117,7 @@ class Engine:
         for i in range(steps):
             toks.append(tok)
             logits, state = self._decode(self.qparams, state, tok)
-            if greedy or rng is None:
+            if greedy:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
             else:
                 rng, k = jax.random.split(rng)
@@ -123,7 +153,17 @@ class ContinuousBatchingEngine:
       5. one batched W8A8 decode step over all slots; slots with a
          DECODING resident emit their next token (greedy, or per-request
          temperature/top-k sampling), other slots compute into masked
-         garbage.
+         garbage.  With ``spec_k=k`` this decode is a *speculative verify*:
+         a drafter proposes ``k`` tokens per slot, the batched verify step
+         scores all ``k+1`` positions at once (their K/V appended in place
+         at each slot's cursor), accepted prefixes commit and rejected
+         suffixes roll back by rewinding the per-slot cursor — up to
+         ``k+1`` tokens per slot per weight-read pass.  A replaying
+         (preempt-resumed) slot drafts its own recorded tokens, so replay
+         consumes the spec lane at full acceptance and stays
+         token-identical.  SSM/hybrid stacks keep the one-token decode
+         (their recurrent state cannot rewind); ``spec_k`` is ignored for
+         them like ``chunk``.
 
     Chunked prefill is exact for attention stacks (the carry keeps prefill
     precision), so outputs are token-identical to the unchunked engine for
@@ -152,7 +192,9 @@ class ContinuousBatchingEngine:
                  rt: Runtime | None = None, prefill_bucket: int = 16,
                  policy: str | SchedulingPolicy | None = "fifo",
                  chunk: int | None = None,
-                 max_step_tokens: int | None = None):
+                 max_step_tokens: int | None = None,
+                 spec_k: int = 0,
+                 drafter: str | Drafter | None = "ngram"):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -170,6 +212,11 @@ class ContinuousBatchingEngine:
         self.chunk = None if (chunk is None or self._has_ssm) else int(chunk)
         if self.chunk is not None and self.chunk < 1:
             raise ValueError("chunk must be >= 1")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0 (0 = no speculation)")
+        # SSM/hybrid recurrent state cannot rewind: like `chunk`, the spec
+        # lane silently falls back to the exact one-token decode there
+        self.spec_k = 0 if self._has_ssm else int(spec_k)
         if self.chunk:
             self.max_step_tokens = (max_step_tokens if max_step_tokens
                                     else n_slots + self.chunk)
@@ -182,15 +229,22 @@ class ContinuousBatchingEngine:
             self.max_step_tokens = max_step_tokens
         self.scheduler = Scheduler(n_slots, max_len, policy)
         self.policy = self.scheduler.policy
-        self.state = M.init_decode_state(cfg, n_slots, max_len)
+        # the pool keeps spec_k rows of headroom past max_len so a verify
+        # window starting at the last live position never clamp-wraps its
+        # in-place appends onto valid rows
+        self._state_len = max_len + self.spec_k
+        self.state = M.init_decode_state(cfg, n_slots, self._state_len)
         self._last_tok = np.zeros((n_slots,), np.int32)
+        self._slot_pos = np.zeros((n_slots,), np.int64)   # host cursor mirror
         self._carries: dict[int, Any] = {}        # slot -> prefill carry
         self._rngs: dict[int, np.random.Generator] = {}   # rid -> sampler
         self._next_rid = 0
         self._t0 = time.perf_counter()
         self.stats = {"steps": 0, "decode_steps": 0, "prefill_tokens": 0,
                       "chunks": 0, "max_step_prefill_tokens": 0,
-                      "preemptions": 0}
+                      "max_step_total_tokens": 0, "preemptions": 0,
+                      "verify_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0}
 
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len, self.rt))
@@ -201,6 +255,12 @@ class ContinuousBatchingEngine:
             self._finalize_write = jax.jit(
                 lambda s, slot, c: T.write_slot(
                     s, slot, M.finalize_prefill_carry(cfg, c, max_len)))
+        if self.spec_k:
+            self._drafter = make_drafter(drafter, cfg, self.rt, self.spec_k)
+            self._h_last = (np.zeros((n_slots, cfg.d_model), np.float32)
+                            if self._drafter.kind == "model" else None)
+            self._verify = jax.jit(
+                lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt))
         if self.rt.mesh is None:
             self._decode = jax.jit(
                 lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
@@ -217,7 +277,8 @@ class ContinuousBatchingEngine:
         cfg, mesh = self.cfg, self.rt.mesh
         self.params, self.qparams, qsh = _place_on_mesh(
             cfg, self.params, self.qparams, self.rt)
-        pool_shape = ShapeConfig("serve", self.max_len, self.n_slots, "decode")
+        pool_shape = ShapeConfig("serve", self._state_len, self.n_slots,
+                                 "decode")
         ssh = SH.decode_state_shardings(
             cfg, pool_shape, jax.eval_shape(lambda: self.state), mesh)
         self.state = jax.device_put(self.state, ssh)
@@ -227,6 +288,14 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(
             lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
             in_shardings=(qsh, ssh, tok_sh), out_shardings=(logits_sh, ssh))
+        if self.spec_k:
+            # the verify step's I/O pins beside the pool so the spec lane
+            # never migrates the SLC rows (same rule as the decode step)
+            vsh = SH.verify_shardings(self.n_slots, mesh)
+            self._verify = jax.jit(
+                lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt),
+                in_shardings=(qsh, ssh, vsh["tokens"]),
+                out_shardings=(vsh["logits"], vsh["hidden"], ssh))
         # admissions write a replicated B=1 row into the sharded pool; the
         # out_shardings pin keeps the pool resident (no migration per admit)
         self._write = jax.jit(T.write_slot, out_shardings=ssh)
@@ -288,8 +357,12 @@ class ContinuousBatchingEngine:
             rng = self._rngs[req.rid] = np.random.default_rng(seed)
         logits = row.astype(np.float64) / req.temperature
         if req.top_k is not None and req.top_k < logits.size:
-            kth = np.partition(logits, -req.top_k)[-req.top_k]
-            idx = np.nonzero(logits >= kth)[0]
+            # exactly top_k candidates: a `logits >= kth` test admits every
+            # token tied at the k-th logit (> top_k of them).  Stable sort
+            # breaks ties deterministically (lowest token id wins); ids are
+            # restored to ascending order for the cumulative draw.
+            order = np.argsort(-logits, kind="stable")[:req.top_k]
+            idx = np.sort(order)
         else:
             idx = np.arange(logits.size)
         z = logits[idx] - logits[idx].max()
@@ -333,6 +406,11 @@ class ContinuousBatchingEngine:
             self.policy.on_tokens(req, 1)
         req.state = RequestState.DECODING
         self._last_tok[req.slot] = tok
+        # host mirror of the slot cursor (the spec lane's rollback base):
+        # after prefill the cache holds exactly the prompt
+        self._slot_pos[req.slot] = req.prompt_len
+        if self.spec_k and self._h_last is not None:
+            self._h_last[req.slot] = 0.0      # MTP head free-runs post-prefill
         if req.replay_pos >= len(req.output) and req.should_stop():
             self._retire(req, self._now())            # budget of 1 token
 
@@ -426,19 +504,33 @@ class ContinuousBatchingEngine:
                 while (budget > 0 and req.state is RequestState.PREFILLING):
                     n = min(self.chunk, req.prompt_len - req.prefill_pos,
                             budget)
+                    if req.prefill_pos + n >= req.prompt_len:
+                        # a finalizing chunk moves this slot into the decode
+                        # batch of this same iteration — reserve one budget
+                        # token for that decode, or defer the finalize
+                        if n + 1 > budget:
+                            n = budget - 1
+                        if n <= 0:
+                            break
                     got = self._run_chunk(req, n)
                     if not got:
                         break
-                    budget -= got
+                    budget -= got + (1 if req.state is RequestState.DECODING
+                                     else 0)
                     step_pf += got
         self.stats["prefill_tokens"] += step_pf
         self.stats["max_step_prefill_tokens"] = max(
             self.stats["max_step_prefill_tokens"], step_pf)
         dec = [(slot, r) for slot, r in self.scheduler.active.items()
                if r.state is RequestState.DECODING]
+        self.stats["max_step_total_tokens"] = max(
+            self.stats["max_step_total_tokens"], step_pf + len(dec))
         if not dec:
             return step_pf > 0
         self.stats["decode_steps"] += 1
+        if self.spec_k:
+            self._spec_decode(dec)
+            return True
         logits, self.state = self._decode(
             self.qparams, self.state, jnp.asarray(self._last_tok))
         nxt = self._next_tokens(logits, dec)
@@ -460,6 +552,106 @@ class ContinuousBatchingEngine:
                 self._retire(req, now)
         return True
 
+    # -- speculative decode lane -------------------------------------------
+    def _draft_for(self, req: Request, dr) -> list[int]:
+        """k draft tokens for one slot.  A replaying (preempt-resumed)
+        request drafts its own recorded tokens — perfect drafts, so replay
+        advances k+1 positions per verify step and stays token-identical.
+        The tail past the recorded output comes from the drafter."""
+        k = self.spec_k
+        d = list(req.output[req.replay_pos:req.replay_pos + k])
+        if len(d) < k:
+            if self._drafter.kind == "model":
+                d += [int(t) for t in dr[req.slot, :k - len(d)]]
+            else:
+                ctx = req.prompt + req.output[:req.replay_pos] + d
+                d += self._drafter.draft(ctx, k - len(d))
+        return d
+
+    def _spec_decode(self, dec: list[tuple[int, Request]]) -> None:
+        """One verify pass over the decode pool: feed [last committed token,
+        k drafts] per slot, accept each slot's matching prefix, emit the
+        first non-matching (or bonus) token, and roll back the per-slot
+        cursor to the committed prefix (the SLC lengths rewind — rejected
+        rows die in place, no erase)."""
+        k = self.spec_k
+        toks = np.zeros((self.n_slots, k + 1), np.int32)
+        toks[:, 0] = self._last_tok
+        dr = None
+        if self._drafter.kind == "model":
+            dr = np.asarray(self._drafter.draft_batch(
+                self.qparams, self._h_last, self._last_tok, self._slot_pos))
+        drafts: dict[int, list[int]] = {}
+        for slot, req in dec:
+            drafts[slot] = self._draft_for(req, dr)
+            toks[slot, 1:] = drafts[slot]
+        logits, hidden, self.state = self._verify(
+            self.qparams, self.state, jnp.asarray(toks))
+        self.stats["verify_steps"] += 1
+        if all(req.temperature <= 0 for _, req in dec):
+            # all-greedy: argmax on device, ship [B, T] ints instead of the
+            # full [B, T, V] logits (same fast path as _next_tokens)
+            rows = None
+            greedy_tok = np.asarray(jnp.argmax(logits, -1), np.int64)
+        else:
+            rows, greedy_tok = np.asarray(logits, np.float32), None
+        hid = (np.asarray(hidden, np.float32)
+               if self._drafter.kind == "model" else None)
+        now = self._now()
+        for slot, req in dec:
+            fed = drafts[slot]
+            committed = 0                 # accepted K/V rows past toks[:, 0]
+            for i in range(k + 1):
+                # row i of `rows` is the model's next-token distribution
+                # after consuming toks[slot, :i+1] — valid because reaching
+                # row i means every earlier draft was accepted
+                replaying = req.replay_pos < len(req.output)
+                if replaying:
+                    # the draw still runs (discarded) so a resumed sampled
+                    # request re-consumes one draw per recorded token and
+                    # its stream stays aligned — same rule as _next_tokens
+                    if req.temperature > 0:
+                        self._sample_token(req, rows[slot, i])
+                    tok = req.output[req.replay_pos]
+                    req.replay_pos += 1
+                else:
+                    tok = (int(greedy_tok[slot, i]) if rows is None
+                           else self._sample_token(req, rows[slot, i]))
+                    req.output.append(tok)
+                    req.replay_pos = len(req.output)
+                    self.policy.on_tokens(req, 1)
+                self._last_tok[slot] = tok
+                if hid is not None:
+                    self._h_last[slot] = hid[slot, i]
+                accepted = i < k and tok == fed[i]
+                if not replaying and i < k:
+                    self.stats["spec_drafted"] += 1
+                    self.stats["spec_accepted"] += int(accepted)
+                if req.replay_pos >= len(req.output) and req.should_stop():
+                    committed += int(accepted)
+                    self._retire(req, now)
+                    break
+                if not accepted:
+                    break
+                committed += 1
+            self._slot_pos[slot] += 1 + committed
+        # rollback: rewind every cursor to its committed prefix; rejected
+        # suffix rows stay as dead in-place entries until overwritten
+        self.state = T.rewind_pos(self.state, self._pos_device())
+
+    def _pos_device(self):
+        pos = jnp.asarray(np.asarray(self._slot_pos, np.int32))
+        if self.rt.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            return jax.device_put(pos, NamedSharding(self.rt.mesh, P()))
+        return pos
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of (non-replay) drafted tokens the verify step accepted."""
+        d = self.stats["spec_drafted"]
+        return self.stats["spec_accepted"] / d if d else float("nan")
+
     # -- drive to completion ----------------------------------------------
     def drain(self) -> None:
         """Step until the queue and all slots are empty."""
@@ -468,11 +660,22 @@ class ContinuousBatchingEngine:
 
     def generate_all(self, prompts: list[list[int]],
                      max_new_tokens: int | list[int],
-                     eos_id: int | None = None) -> list[list[int]]:
+                     eos_id: int | None = None, *,
+                     raise_on_error: bool = True) -> list[list[int]]:
         """Convenience: submit a ragged batch of prompts, run to completion,
-        return outputs in submission order."""
+        return outputs in submission order.
+
+        A request whose admission/prefill raised finishes with ``.error``
+        set and an empty output; that is indistinguishable from a real
+        empty generation, so by default any failure raises
+        :class:`RequestFailedError` (``.failures`` carries the requests).
+        Pass ``raise_on_error=False`` to get the partial outputs and
+        inspect ``.error`` per request instead."""
         budgets = (max_new_tokens if isinstance(max_new_tokens, list)
                    else [max_new_tokens] * len(prompts))
         reqs = [self.submit(p, m, eos_id) for p, m in zip(prompts, budgets)]
         self.drain()
+        failures = [r for r in reqs if r.error is not None]
+        if failures and raise_on_error:
+            raise RequestFailedError(failures)
         return [r.output for r in reqs]

@@ -167,7 +167,10 @@ class PriorityPolicy(SchedulingPolicy):
     def victims(self, active, queue, now):
         if not (self.preemptive and active and queue):
             return []
-        top = max(queue, key=lambda r: (r.priority,))
+        # the challenger is whoever `select` would admit next — same
+        # ordering (priority, then sort_key), so victim choice is
+        # deterministic regardless of queue insertion order
+        top = self.select(queue, now)
         victim = min(active.values(), key=lambda r: (r.priority,) + r.sort_key())
         if top.priority > victim.priority:
             return [victim]

@@ -320,6 +320,46 @@ class TestShardedServe:
         """)
         assert out.count("PARITY_OK") == 2
 
+    def test_sharded_spec_decode_token_identical(self):
+        """Speculative decode over the mesh must match the single-device
+        *non-speculative* engine token-for-token: the verify step's I/O is
+        pinned beside the pool (dist.sharding.verify_shardings) and the
+        cursor rollback is a replicated pos rewrite.  Covers the ngram
+        drafter on a dense GQA arch (with fair-share preemption riding the
+        spec lane) and the MTP drafter on DeepSeek (MLA + MoE + cfg.mtp)."""
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            for arch, quantize, drafter, policy in (
+                    ("llama3-8b", True, "ngram", "fair:3"),
+                    ("deepseek-v3-671b", False, "mtp", "sjf")):
+                cfg = ARCHS[arch].reduced()
+                params = M.init_params(jax.random.key(0), cfg)
+                rng = np.random.default_rng(13)
+                prompts = [rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 13)).tolist()
+                           for _ in range(6)]
+                budgets = [int(rng.integers(2, 9)) for _ in range(6)]
+                ref = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32,
+                    quantize=quantize).generate_all(prompts, budgets)
+                mesh = jax.make_mesh((2, 4), ("data", "model"))
+                rt = Runtime(mesh=mesh, data_axes=("data",),
+                             serve_resident_moe=True)
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32, quantize=quantize,
+                    chunk=4, policy=policy, spec_k=4, drafter=drafter, rt=rt)
+                got = eng.generate_all(prompts, budgets)
+                assert got == ref, (arch, got, ref)
+                assert eng.stats["verify_steps"] > 0
+                print("SPEC_PARITY_OK", arch,
+                      "accept=%.2f" % eng.acceptance_rate)
+        """)
+        assert out.count("SPEC_PARITY_OK") == 2
+
     def test_sharded_chunked_prefill_token_identical(self):
         """Chunked prefill over the mesh must match the single-device
         *unchunked* engine: the carry stays pinned

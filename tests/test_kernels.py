@@ -123,3 +123,60 @@ class TestDecodeAttn:
         v_q2 = v_q.at[:, 64:].set(-127)
         o2 = da_ops.decode_attention(q, k_q2, k_s, v_q2, v_s, jnp.array(64))
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+
+class TestVerifyAttn:
+    """T>1 per-slot verify kernel (speculative decode): T query tokens per
+    slot, query t masked to keys [0, pos+t]."""
+
+    @pytest.mark.parametrize("b,s,g,rep,d,t", [
+        (2, 256, 2, 2, 64, 4),
+        (1, 300, 4, 1, 64, 5),        # non-aligned seq
+        (3, 512, 1, 4, 128, 3),
+        (2, 128, 2, 2, 64, 1),        # T=1 degenerates to plain decode
+    ])
+    def test_matches_oracle(self, b, s, g, rep, d, t):
+        k1, k2, k3 = jax.random.split(jax.random.key(b * s + g + d + t), 3)
+        q = jax.random.normal(k1, (b, t, g * rep, d))
+        k = jax.random.normal(k2, (b, s, g, d))
+        v = jax.random.normal(k3, (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.asarray(np.arange(b) * 7 + s // 2, jnp.int32)
+        want = da_ref.verify_ref(q, k_q, k_s, v_q, v_s, pos)
+        got = da_ops.verify_attention(q, k_q, k_s, v_q, v_s, pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-6)
+
+    def test_t1_equals_decode_attention(self):
+        """The verify kernel at T=1 is the decode kernel."""
+        b, s, g, d = 2, 128, 2, 64
+        q = jax.random.normal(jax.random.key(3), (b, 1, g, d))
+        k = jax.random.normal(jax.random.key(4), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(5), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        ln = jnp.array([40, 90], jnp.int32)
+        a = da_ops.decode_attention(q, k_q, k_s, v_q, v_s, ln)
+        # decode masks keys < length; verify masks keys < pos + t + 1
+        b_ = da_ops.verify_attention(q, k_q, k_s, v_q, v_s, ln - 1)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-6)
+
+    def test_stepped_mask_excludes_future_rows(self):
+        """Poisoning rows past each query's own limit (pos + t) must not
+        change that query's output — the per-row stepped causal mask."""
+        b, s, g, d, t = 1, 128, 2, 64, 3
+        q = jax.random.normal(jax.random.key(6), (b, t, g, d))
+        k = jax.random.normal(jax.random.key(7), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(8), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.array([50], jnp.int32)
+        o1 = da_ops.verify_attention(q, k_q, k_s, v_q, v_s, pos)
+        for qt in range(t):
+            lim = 50 + qt + 1
+            k_q2 = k_q.at[:, lim:].set(127)
+            v_q2 = v_q.at[:, lim:].set(-127)
+            o2 = da_ops.verify_attention(q, k_q2, k_s, v_q2, v_s, pos)
+            np.testing.assert_allclose(np.asarray(o1[:, qt]),
+                                       np.asarray(o2[:, qt]), rtol=1e-6)

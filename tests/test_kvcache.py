@@ -164,3 +164,35 @@ class TestChunkedAppend:
         for name in ("k_q", "k_s", "v_q", "v_s"):
             np.testing.assert_array_equal(np.asarray(getattr(one, name)),
                                           np.asarray(getattr(two, name)))
+
+
+class TestSpeculativeRollback:
+    def test_rewind_then_overwrite_equals_straight_append(self):
+        """The speculative verify pattern: append a k+1-token window at the
+        per-slot cursor, rewind lengths to the accepted prefix, then let
+        the next append overwrite the dead rows in place — the cache must
+        equal one that only ever appended the committed tokens."""
+        k, v = _kv(7, t=4)
+        k2, v2 = _kv(8, t=4)
+        pos = jnp.array([0, 3, 6], jnp.int32)
+        # speculative: 4-token window, only 2 accepted per slot
+        spec = KV.alloc_slot(KV.init_cache(L, B, S, H, D),
+                             jnp.arange(B), pos)
+        spec = KV.append_layer(spec, 0, k, v, pos)
+        spec = KV.rewind_lengths(spec, pos + 2)          # rollback, no erase
+        np.testing.assert_array_equal(np.asarray(spec.lengths),
+                                      np.asarray(pos) + 2)
+        # next window starts at the committed cursor, overwriting dead rows
+        spec = KV.append_layer(spec, 0, k2, v2, spec.lengths)
+        # straight: only the committed tokens ever appended
+        ref = KV.append_layer(KV.init_cache(L, B, S, H, D), 0,
+                              k[:, :2], v[:, :2], pos)
+        ref = KV.append_layer(ref, 0, k2, v2, pos + 2)
+        for b in range(B):
+            p = int(pos[b])
+            np.testing.assert_array_equal(
+                np.asarray(spec.k_q[0, b, :p + 6]),
+                np.asarray(ref.k_q[0, b, :p + 6]))
+            np.testing.assert_array_equal(
+                np.asarray(spec.v_q[0, b, :p + 6]),
+                np.asarray(ref.v_q[0, b, :p + 6]))

@@ -133,6 +133,23 @@ class TestPolicies:
         pol.on_tokens(b, 3)
         assert s.preemption_victims() == []
 
+    def test_preemptive_victims_independent_of_queue_order(self):
+        """The challenger must be picked with select()'s full ordering
+        (priority, then sort_key) — `max(queue, key=priority)` made the
+        choice depend on queue insertion order."""
+        pol = PriorityPolicy(preemptive=True)
+        resident = {0: _req(0, priority=2)}
+        resident[0].state = RequestState.DECODING
+        hi_late = _req(5, priority=7, arrival=5.0)
+        hi_early = _req(4, priority=7, arrival=4.0)
+        lo = _req(6, priority=1, arrival=0.0)
+        for queue in ([hi_late, lo, hi_early], [hi_early, hi_late, lo],
+                      [lo, hi_late, hi_early]):
+            assert pol.victims(resident, queue, 0.0) == [resident[0]]
+            # the challenger the victims decision is based on == whoever
+            # select() admits next (deterministic FIFO-within-priority)
+            assert pol.select(queue, 0.0) is hi_early
+
     def test_scheduler_fail_returns_slot(self):
         s = Scheduler(n_slots=1, max_len=32)
         r = _req(0)
@@ -211,6 +228,30 @@ class TestChunkedPrefillParity:
         assert cursors == sorted(cursors)
         eng.drain()
         assert len(b.output) == 4
+
+    def test_budget_holds_when_finalize_and_decode_share_iteration(
+            self, gqa_setup):
+        """A finalizing chunk moves its slot into the same iteration's
+        decode batch, so prefill + decode tokens used to exceed
+        max_step_tokens by the number of finalizes.  The engine now
+        reserves one budget token per finalize (deferring the final chunk
+        when the budget can't cover it): total tokens processed per
+        iteration — prefill chunks plus decode-lane slots — never exceed
+        the budget, and outputs are unchanged."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        rng = np.random.default_rng(5)
+        # short prompts + a resident decoder maximize the finalize+decode
+        # overlap the old accounting missed
+        prompts = [rng.integers(0, cfg.vocab_size, int(l)).tolist()
+                   for l in rng.integers(2, 6, size=6)]
+        budgets = [int(b) for b in rng.integers(3, 7, size=6)]
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all(prompts, budgets)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                       chunk=4, max_step_tokens=3)
+        assert eng.generate_all(prompts, budgets) == ref
+        assert 0 < eng.stats["max_step_total_tokens"] <= eng.max_step_tokens
 
     def test_ssm_stack_falls_back_to_exact_length(self, gqa_setup):
         from repro.serve.engine import ContinuousBatchingEngine
@@ -312,6 +353,22 @@ class TestPerRequestSampling:
         eng.drain()
         assert r1.n_preemptions >= 1
         assert r1.output == solo.output
+
+    def test_top_k_ties_truncate_to_exactly_k(self, gqa_setup):
+        """Ties at the k-th logit used to admit every tied token
+        (`logits >= kth` overflow); the candidate set must be exactly
+        top_k, deterministically (lowest token id wins ties)."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        from repro.serve.scheduler import Request
+        cfg, params = gqa_setup
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32)
+        req = Request(rid=0, prompt=[1], max_new_tokens=4,
+                      temperature=1.0, top_k=2, seed=0)
+        row = np.zeros((cfg.vocab_size,), np.float32)
+        row[3] = row[5] = row[9] = 7.0       # three-way tie above the rest
+        seen = {eng._sample_token(req, row) for _ in range(64)}
+        # stable tiebreak keeps ids 3 and 5; 9 (the overflow) is excluded
+        assert seen <= {3, 5} and len(seen) == 2
 
     def test_bad_sampling_params_rejected(self, gqa_setup):
         from repro.serve.engine import ContinuousBatchingEngine

@@ -123,6 +123,59 @@ class TestContinuousBatchingEquivalence:
         assert r_eos.state is RequestState.FINISHED
         assert len(r_next.output) == 3          # backfilled into the slot
 
+    def test_generate_without_rng_refuses_silent_greedy(self):
+        """Engine.generate(greedy=False, rng=None) used to silently fall
+        back to greedy argmax; it must raise instead."""
+        import jax.numpy as jnp
+        from repro.models import model as M
+        from repro.serve.engine import Engine
+
+        cfg = ARCHS["llama3-8b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        eng = Engine(cfg=cfg, params=params, max_len=16)
+        batch = {"inputs": jnp.asarray([[1, 2, 3, 4]], jnp.int32)}
+        with pytest.raises(ValueError):
+            eng.generate(batch, steps=2, greedy=False)
+        # explicit rng samples fine
+        toks, _ = eng.generate(batch, steps=2, greedy=False,
+                               rng=jax.random.key(7))
+        assert toks.shape == (1, 2)
+
+    def test_generate_all_surfaces_failed_requests(self):
+        """A request failed inside admission returns an empty output that is
+        indistinguishable from a real empty generation — generate_all must
+        raise by default (raise_on_error=False opts into per-request
+        .error inspection instead)."""
+        from repro.models import model as M
+        from repro.serve.engine import ContinuousBatchingEngine, \
+            RequestFailedError
+
+        cfg = ARCHS["llama3-8b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+
+        def make(n_calls_fail=1):
+            eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32)
+            real, calls = eng._prefill, {"n": 0}
+
+            def exploding(p, b):
+                calls["n"] += 1
+                if calls["n"] <= n_calls_fail:
+                    raise RuntimeError("RESOURCE_EXHAUSTED: synthetic OOM")
+                return real(p, b)
+
+            eng._prefill = exploding
+            return eng
+
+        prompts = [[1, 2, 3], [4, 5, 6]]
+        with pytest.raises(RequestFailedError) as ei:
+            make().generate_all(prompts, 3)
+        assert len(ei.value.failures) == 1
+        assert "RESOURCE_EXHAUSTED" in ei.value.failures[0].error
+        # opting out returns partial outputs with .error set per request
+        eng = make()
+        outs = eng.generate_all(prompts, 3, raise_on_error=False)
+        assert outs[0] == [] and len(outs[1]) == 3
+
     def test_per_request_latency_metrics_recorded(self):
         from repro.models import model as M
         from repro.serve.engine import ContinuousBatchingEngine

@@ -1,0 +1,369 @@
+"""Speculative decode lane: drafters, the batched verify step, cursor
+rollback, and the engine-level guarantee that greedy speculative decode is
+token-identical to the plain engine.
+
+Covers:
+
+* the n-gram (prompt-lookup) drafter proposes continuations of repeated
+  context and falls back to repeat-last;
+* ``verify_step`` logits are bit-identical to sequential ``decode_step``
+  calls (the acceptance test's foundation), and a rewound verify state
+  decodes on identically (rollback exactness);
+* spec decode outputs equal the non-speculative engine for every policy,
+  chunked and unchunked, at several draft lengths — with a worst-case
+  (never-right) and an oracle (always-right) drafter bounding both ends;
+* preempt-resume replay rides the spec lane (recorded tokens as perfect
+  drafts) and reproduces the uncontended run;
+* sampled requests stay stream-exact: one RNG draw per emitted token, so
+  seeded sampling with and without speculation emits the same tokens;
+* the MTP drafter (DeepSeek head) drafts batched and stays lossless.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.serve.drafter import Drafter, NGramDrafter, make_drafter
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# drafters (no model)
+# ---------------------------------------------------------------------------
+class TestNGramDrafter:
+    def test_prompt_lookup_proposes_continuation(self):
+        d = NGramDrafter(max_n=3)
+        #            0  1  2  3  4  5  6  7
+        ctx = [5, 6, 7, 8, 9, 5, 6, 7]
+        # trailing 3-gram (5,6,7) recurs at 0; continuation is 8, 9, 5, ...
+        assert d.draft(ctx, 3) == [8, 9, 5]
+
+    def test_falls_back_to_repeat_last(self):
+        d = NGramDrafter()
+        assert d.draft([1, 2, 3, 4], 3) == [4, 4, 4]
+        assert d.draft([9], 2) == [9, 9]
+
+    def test_short_match_pads_with_last(self):
+        d = NGramDrafter(max_n=2)
+        ctx = [1, 2, 3, 1, 2]       # (1,2) recurs at 0; continuation [3,1,2]
+        assert d.draft(ctx, 4) == [3, 1, 2, 2]
+
+    def test_make_drafter_parsing(self):
+        cfg = ARCHS["llama3-8b"].reduced()
+        assert isinstance(make_drafter("ngram", cfg, None, 4), NGramDrafter)
+        assert make_drafter("ngram:5", cfg, None, 4).max_n == 5
+        inst = NGramDrafter()
+        assert make_drafter(inst, cfg, None, 4) is inst
+        with pytest.raises(ValueError):
+            make_drafter("oracle", cfg, None, 4)
+        with pytest.raises(ValueError):
+            make_drafter("mtp", cfg, None, 4)    # llama has no MTP head
+
+
+# ---------------------------------------------------------------------------
+# verify step (model level)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = ARCHS["llama3-8b"].reduced()
+    from repro.models import model as M
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg, n=6, seed=11):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, int(l)).tolist()
+               for l in rng.integers(3, 16, size=n)]
+    budgets = [int(b) for b in rng.integers(2, 9, size=n)]
+    return prompts, budgets
+
+
+class TestVerifyStep:
+    @pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v3-671b"])
+    def test_verify_logits_match_sequential_decode(self, arch):
+        """Row i of the verify logits must equal the i-th sequential decode
+        step's logits bit-for-bit (GQA int8 path and absorbed MLA), and the
+        rewound verify state must decode on identically to the sequential
+        state — the rollback-exactness property."""
+        from repro.models import model as M
+        from repro.models import transformer as T
+        from repro.models.transformer import Runtime
+        cfg = ARCHS[arch].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        rt = Runtime()
+        B, max_len, steps = 3, 32, 4
+        state = M.init_decode_state(cfg, B, max_len)
+        for b, plen in enumerate((4, 6, 5)):
+            toks = jnp.asarray(np.arange(1, plen + 1)[None], jnp.int32)
+            _, one = M.prefill(params, cfg, {
+                "inputs": toks, "lengths": jnp.array([plen], jnp.int32)},
+                max_len, rt)
+            state = T.write_slot(state, jnp.int32(b), one)
+        tok = jnp.array([3, 5, 7], jnp.int32)
+        st, seq_logits = state, []
+        for _ in range(steps):
+            lg, st = M.decode_step(params, cfg, st, tok, rt)
+            seq_logits.append(np.asarray(lg))
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        greedy = [np.argmax(l, -1) for l in seq_logits]
+        fed = jnp.asarray(np.stack(
+            [[3, 5, 7]] + greedy[:steps - 1], axis=1), jnp.int32)
+        vlog, hidden, vstate = M.verify_step(params, cfg, state, fed, rt)
+        vlog = np.asarray(vlog)
+        for i in range(steps):
+            np.testing.assert_array_equal(vlog[:, i], seq_logits[i])
+        assert hidden.shape == (B, steps, cfg.d_model)
+        np.testing.assert_array_equal(np.asarray(vstate["pos"]),
+                                      np.asarray(state["pos"]) + steps)
+        # rollback: rewind the cursor to the sequential position and decode
+        rewound = T.rewind_pos(vstate, np.asarray(st["pos"]))
+        lg_a, _ = M.decode_step(params, cfg, rewound, tok, rt)
+        lg_b, _ = M.decode_step(params, cfg, st, tok, rt)
+        np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+
+    def test_ssm_stack_rejected(self):
+        from repro.models import model as M
+        from repro.models.transformer import Runtime
+        cfg = ARCHS["mamba2-2.7b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        state = M.init_decode_state(cfg, 2, 16)
+        with pytest.raises(NotImplementedError):
+            M.verify_step(params, cfg, state,
+                          jnp.zeros((2, 3), jnp.int32), Runtime())
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity
+# ---------------------------------------------------------------------------
+class _ConstantDrafter(Drafter):
+    """Worst case: always proposes the same token (never right unless the
+    model actually loops on it)."""
+    name, kind = "const", "host"
+
+    def __init__(self, tok):
+        self.tok = tok
+
+    def draft(self, context, k):
+        return [self.tok] * k
+
+
+class _OracleDrafter(Drafter):
+    """Best case: replays a precomputed reference continuation — accepts at
+    ~100%, so verify_steps collapses by ~(k+1)x."""
+    name, kind = "oracle", "host"
+
+    def __init__(self, table):
+        self.table = table               # prompt tuple -> full output list
+
+    def draft(self, context, k):
+        for (prompt, out) in self.table:
+            n = len(prompt)
+            if context[:n] == prompt:
+                done = len(context) - n
+                cont = out[done:done + k]
+                return (cont + [context[-1]] * k)[:k]
+        return [context[-1]] * k
+
+
+class TestSpecParity:
+    def test_all_policies_chunked_and_not(self, gqa_setup):
+        """Acceptance: greedy spec decode is token-identical to the
+        non-speculative engine for all four policies, chunked and
+        unchunked, at spec_k in {2, 4, 8}."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, budgets = _trace(cfg)
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all(prompts, budgets)
+        for policy in ("fifo", "priority", "sjf", "fair"):
+            for chunk in (None, 4):
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=2, max_len=32, policy=policy,
+                    chunk=chunk, spec_k=4)
+                assert eng.generate_all(prompts, budgets) == ref, \
+                    (policy, chunk)
+                assert eng.stats["verify_steps"] > 0
+                assert eng.stats["spec_drafted"] > 0
+        for k in (2, 8):
+            eng = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=32, spec_k=k)
+            assert eng.generate_all(prompts, budgets) == ref, k
+
+    def test_worst_and_best_case_drafters(self, gqa_setup):
+        """A never-right drafter only costs verify passes; an oracle drafter
+        accepts (nearly) everything and cuts verify steps by ~(k+1)x.  Both
+        stay token-identical — draft quality is a pure performance knob."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, budgets = _trace(cfg)
+        ref_eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32)
+        ref = ref_eng.generate_all(prompts, budgets)
+        base_steps = ref_eng.stats["decode_steps"]
+
+        worst = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32, spec_k=4,
+            drafter=_ConstantDrafter(tok=cfg.vocab_size - 1))
+        assert worst.generate_all(prompts, budgets) == ref
+
+        oracle = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32, spec_k=4,
+            drafter=_OracleDrafter(list(zip(prompts, ref))))
+        assert oracle.generate_all(prompts, budgets) == ref
+        assert oracle.acceptance_rate > 0.9
+        assert oracle.stats["verify_steps"] < base_steps / 2
+
+    def test_eos_inside_verify_window(self, gqa_setup):
+        """An accepted draft that equals eos must stop the request exactly
+        where the non-speculative engine would — no tokens past eos leak
+        from the window, and the slot backfills."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        full = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=32).generate_all([prompts[0]], [8])[0]
+        eng = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=32, spec_k=4,
+            drafter=_OracleDrafter([(prompts[0], full)]))
+        r_eos = eng.submit(prompts[0], 8, eos_id=full[2])
+        r_next = eng.submit(list(reversed(prompts[0])), 3)
+        eng.drain()
+        assert r_eos.output == full[:3]
+        assert len(r_next.output) == 3
+
+    def test_spec_k_ignored_for_ssm(self):
+        from repro.models import model as M
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg = ARCHS["mamba2-2.7b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                       spec_k=4)
+        assert eng.spec_k == 0               # recurrent state cannot rewind
+        prompts, budgets = _trace(cfg, n=3)
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32).generate_all(prompts, budgets)
+        assert eng.generate_all(prompts, budgets) == ref
+
+
+class TestSpecPreemptionAndSampling:
+    def test_preempted_request_reproduces_unpreempted_output(self, gqa_setup):
+        """Preempt-resume under the spec lane: replayed tokens ride the
+        verify window as perfect drafts; the resumed output equals the
+        uncontended run token-for-token."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=48).generate_all([prompts[0]], [14])[0]
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="fair:3", chunk=4, spec_k=4)
+        r1 = eng.submit(prompts[0], 14, user="A")
+        r2 = eng.submit(prompts[1], 6, user="B")
+        eng.drain()
+        assert r1.n_preemptions >= 1
+        assert r1.output == solo
+        assert len(r2.output) == 6
+
+    def test_preemptive_priority_unchunked(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo = ContinuousBatchingEngine(
+            cfg, params, n_slots=1, max_len=48).generate_all([prompts[2]], [10])[0]
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="priority:preempt", spec_k=2)
+        lo = eng.submit(prompts[2], 10, priority=0)
+        for _ in range(3):
+            eng.step()
+        hi = eng.submit(prompts[3], 3, priority=9)
+        eng.drain()
+        assert lo.n_preemptions >= 1
+        assert lo.output == solo
+        assert len(hi.output) == 3
+
+    def test_sampled_request_preempted_under_spec_reproduces_solo(
+            self, gqa_setup):
+        """Regression: spec-lane replay rows must still consume one RNG
+        draw per recorded token (like the non-spec replay path), or a
+        sampled request that is preempted and resumed under spec_k>0
+        diverges from its uncontended run."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg)
+        solo_eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48)
+        solo = solo_eng.submit(prompts[0], 14, temperature=0.8, top_k=16,
+                               seed=7)
+        solo_eng.drain()
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=48,
+                                       policy="fair:3", chunk=4, spec_k=4)
+        r1 = eng.submit(prompts[0], 14, temperature=0.8, top_k=16, seed=7,
+                        user="A")
+        r2 = eng.submit(prompts[1], 6, user="B")
+        eng.drain()
+        assert r1.n_preemptions >= 1
+        assert r1.output == solo.output
+
+    def test_sampling_is_stream_exact_under_speculation(self, gqa_setup):
+        """One RNG draw per emitted token and acceptance = 'draft equals
+        the sampled token', so seeded sampling emits identical streams with
+        and without the spec lane."""
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        prompts, _ = _trace(cfg, n=4)
+
+        def run(k):
+            eng = ContinuousBatchingEngine(cfg, params, n_slots=2,
+                                           max_len=32, spec_k=k)
+            reqs = [eng.submit(p, 6, temperature=0.8, top_k=16, seed=100 + i)
+                    for i, p in enumerate(prompts)]
+            eng.drain()
+            return [r.output for r in reqs]
+
+        assert run(0) == run(4)
+
+
+class TestMTPDrafter:
+    def test_mtp_drafts_and_stays_lossless(self):
+        """DeepSeek (MLA + MoE + cfg.mtp): the MTP head drafts a [B, k]
+        batch and greedy outputs stay identical to the plain engine (the
+        untrained head drafts near-randomly; verification absorbs it)."""
+        from repro.models import model as M
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg = ARCHS["deepseek-v3-671b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, cfg.vocab_size, int(l)).tolist()
+                   for l in rng.integers(3, 12, size=4)]
+        budgets = [int(b) for b in rng.integers(2, 7, size=4)]
+        ref = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32,
+            quantize=False).generate_all(prompts, budgets)
+        eng = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=32, quantize=False,
+            spec_k=3, drafter="mtp", chunk=4)
+        assert eng.generate_all(prompts, budgets) == ref
+        assert eng.stats["verify_steps"] > 0
+
+    def test_mtp_draft_shape_and_determinism(self):
+        from repro.models import model as M
+        from repro.models.transformer import Runtime
+        cfg = ARCHS["deepseek-v3-671b"].reduced()
+        params = M.init_params(jax.random.key(0), cfg)
+        h = jnp.zeros((3, cfg.d_model))
+        tok = jnp.array([1, 2, 3], jnp.int32)
+        pos = jnp.array([4, 5, 6], jnp.int32)
+        a = M.mtp_draft(params, cfg, h, tok, pos, 4, Runtime())
+        b = M.mtp_draft(params, cfg, h, tok, pos, 4, Runtime())
+        assert a.shape == (3, 4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert (np.asarray(a) >= 0).all() and \
+            (np.asarray(a) < cfg.vocab_size).all()
+
+    def test_mtp_requires_mtp_head(self, gqa_setup):
+        from repro.serve.engine import ContinuousBatchingEngine
+        cfg, params = gqa_setup
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, n_slots=1, max_len=32,
+                                     spec_k=2, drafter="mtp")
