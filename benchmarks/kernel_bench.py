@@ -45,7 +45,34 @@ def run():
              f"vmem_tile_B={_vmem_bytes(16, bk, bn)};passes=1")
     emit("kernel/bitserial_vs_fused_passes", 0.0,
          "paper array: 8 bit-serial passes (Eq.3 xB_input); MXU: 1 pass")
+    run_decode_attn()
     run_ssm()
+
+
+def run_decode_attn():
+    """Flash-decoding kernel at short context lengths: the block-skip guard
+    (`pl.when(s_idx * bs < max(limits))`) should make wall time track the
+    *live* prefix, not cdiv(max_len, bs) — the structural signal is the
+    live-block count per length."""
+    import jax
+    from repro.kernels.decode_attn import ops as da_ops
+    key = jax.random.key(0)
+    B, S, G, rep, D = 2, 2048, 2, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, G * rep, D))
+    k = jax.random.normal(ks[1], (B, S, G, D))
+    v = jax.random.normal(ks[2], (B, S, G, D))
+    k_q, k_s = quant.quantize_kv(k)
+    v_q, v_s = quant.quantize_kv(v)
+    from repro.kernels.decode_attn.kernel import BLOCK_S
+    for length in (3, 64, 512, 2048):
+        ln = jnp.full((B,), length, jnp.int32)
+        t = time_fn(lambda ln=ln: da_ops.decode_attention(
+            q, k_q, k_s, v_q, v_s, ln))
+        live = -(-length // BLOCK_S)
+        total = -(-S // BLOCK_S)
+        emit(f"kernel/decode_attn_S{S}_len{length}", t,
+             f"live_blocks={live}/{total};bs={BLOCK_S}")
 
 
 def run_ssm():
@@ -67,3 +94,15 @@ def run_ssm():
         vmem = Q * (dh + 2 * S) * 4 + Q * Q * 4 + dh * S * 4
         emit(f"kernel/ssd_chunk_Q{Q}_S{S}", t,
              f"vmem_per_headblk_B={vmem};fused decay+scores+state")
+
+
+if __name__ == "__main__":
+    # `--only decode-attn` is the nightly short-length smoke (CI runs it as
+    # `python -m benchmarks.kernel_bench` from the repo root)
+    import sys
+    print("name,us_per_call,derived")
+    if "--only" in sys.argv:
+        which = sys.argv[sys.argv.index("--only") + 1]
+        {"decode-attn": run_decode_attn, "ssm": run_ssm}[which]()
+    else:
+        run()

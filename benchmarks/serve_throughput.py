@@ -17,11 +17,20 @@ iteration): each record reports the draft acceptance rate and the TPOT
 speedup relative to that policy's non-speculative (k=0) run — the paper's
 per-token weight-read amortization, measured end to end.
 
+With ``--multi-step 1,2,4`` the sweep also covers the fused multi-step
+decode lane (m greedy iterations per jitted call, argmax fed back on
+device): the speedup column for an ``m>1`` record is relative to the same
+policy's (k=0, m=1) baseline.  Every record carries the per-iteration
+host/device wall-time breakdown (``host_ms`` / ``device_ms``) and the
+per-decode-step host transfer volume (``xfer_bytes``) — the transfer-
+discipline trajectory (O(slots*m) greedy, O(slots*k) sampled).
+
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
           [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4] \
           [--policies fifo,sjf,priority,fair] [--chunk 8] \
           [--max-step-tokens 12] [--spec-k 0,2,4,8] [--drafter ngram] \
-          [--mesh 2x4] [--json BENCH_serve_throughput.json]
+          [--multi-step 1,4] [--mesh 2x4] \
+          [--json BENCH_serve_throughput.json]
 
 ``--json`` writes the summary record CI uploads as a workflow artifact
 (the ``BENCH_*.json`` perf trajectory): one record per policy under
@@ -73,13 +82,13 @@ def percentile(sorted_vals, q):
     return sorted_vals[i]
 
 
-def make_engine(cfg, params, args, rt, spec_k=0):
+def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1):
     max_len = args.max_prompt + args.max_new + 1
     return ContinuousBatchingEngine(
         cfg, params, n_slots=args.slots, max_len=max_len, rt=rt,
         policy=args.policy, chunk=args.chunk,
         max_step_tokens=args.max_step_tokens,
-        spec_k=spec_k, drafter=args.drafter)
+        spec_k=spec_k, drafter=args.drafter, multi_step=multi_step)
 
 
 def warm_engine(eng, args):
@@ -95,7 +104,9 @@ def warm_engine(eng, args):
         warm_lens = sorted({min(n, args.max_prompt)
                             for n in range(b, args.max_prompt + b, b)})
     warm = [list(range(1, max(2, n + 1))) for n in warm_lens]
-    eng.generate_all(warm, [2] * len(warm))
+    # multi-step engines warm with >= m budget so the fused block (and its
+    # overshoot rewind) compiles before the measured run
+    eng.generate_all(warm, [max(2, eng.multi_step)] * len(warm))
     for k in eng.stats:
         eng.stats[k] = 0
 
@@ -156,20 +167,32 @@ def summarize(policy, eng, reqs, wall):
         # None (JSON null), never NaN, when nothing was drafted
         "acceptance_rate": (eng.acceptance_rate
                             if eng.stats["spec_drafted"] else None),
+        # eng.multi_step (like eng.spec_k): 1 for SSM stacks
+        "multi_step": eng.multi_step,
+        "multi_blocks": eng.stats["multi_blocks"],
+        # per-iteration host/device wall breakdown + per-decode-step host
+        # transfer volume — the device-resident-lane trajectory metrics
+        "host_ms": 1e3 * (eng.stats["step_s"] - eng.stats["device_s"])
+        / max(1, eng.stats["steps"]),
+        "device_ms": 1e3 * eng.stats["device_s"] / max(1, eng.stats["steps"]),
+        "xfer_bytes": eng.stats["decode_xfer_bytes"]
+        / max(1, eng.stats["decode_steps"]),
+        "xfer_bytes_total": eng.stats["xfer_bytes"],
     }
 
 
-COLS = [("policy", "%-16s"), ("spec_k", "%6d"),
+COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("multi_step", "%5d"),
         ("throughput_tok_s", "%8.1f"),
         ("ttft_p50_ms", "%9.1f"), ("ttft_p99_ms", "%9.1f"),
         ("tpot_p50_ms", "%9.2f"), ("tpot_p99_ms", "%9.2f"),
         ("latency_p99_ms", "%9.1f"), ("queue_delay_p50_ms", "%9.1f"),
         ("queue_delay_p99_ms", "%9.1f"), ("preemptions", "%5d"),
         ("max_step_prefill_tokens", "%11d"),
+        ("host_ms", "%8.2f"), ("device_ms", "%8.2f"), ("xfer_bytes", "%7.0f"),
         ("acceptance_rate", "%7.2f"), ("tpot_speedup", "%8.2f")]
-HEAD = ("policy            spec_k     tok/s  ttft-p50  ttft-p99  tpot-p50  "
-        "tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  max_pf/step  "
-        " accept  speedup")
+HEAD = ("policy            spec_k  mstep     tok/s  ttft-p50  ttft-p99  "
+        "tpot-p50  tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  "
+        "max_pf/step   host_ms   dev_ms  xfer_B   accept  speedup")
 
 
 def main():
@@ -195,6 +218,9 @@ def main():
                          "TPOT speedup column is relative to)")
     ap.add_argument("--drafter", default="ngram",
                     help="draft proposer: ngram[:N] | mtp")
+    ap.add_argument("--multi-step", default="1", metavar="M[,M...]",
+                    help="fused multi-step decode block sizes to sweep at "
+                         'k=0, e.g. "1,2,4" (1 = the per-token baseline)')
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -221,20 +247,29 @@ def main():
           f"new {max(1, args.max_new//2)}..{args.max_new} "
           f"chunk={args.chunk} budget={args.max_step_tokens}")
     spec_ks = [int(s) for s in args.spec_k.split(",")]
+    multi_ms = [int(s) for s in args.multi_step.split(",")]
+    # the spec and fused lanes don't combine (spec_k>0 takes precedence in
+    # the engine), so sweep spec at m=1 and multi-step at k=0; a requested
+    # m=1 baseline is kept even when --spec-k omits 0
+    combos = [(K, 1) for K in spec_ks]
+    for m in multi_ms:
+        if (0, m) not in combos:
+            combos.append((0, m))
     print(HEAD)
     records = {}
     for pol in policies:
         args.policy = pol
         recs = []
-        for K in spec_ks:
-            eng = make_engine(cfg, params, args, rt, spec_k=K)
+        for K, m in combos:
+            eng = make_engine(cfg, params, args, rt, spec_k=K, multi_step=m)
             warm_engine(eng, args)
             reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
                                       priorities, users)
             recs.append(summarize(pol, eng, reqs, wall))
-        # speedup baseline: the k=0 record wherever it sits in the sweep
-        # (None — JSON null — when the sweep has no baseline or NaN TPOTs)
-        base = next((r for r in recs if r["spec_k"] == 0), None)
+        # speedup baseline: the (k=0, m=1) record wherever it sits in the
+        # sweep (None — JSON null — when there is no baseline or NaN TPOTs)
+        base = next((r for r in recs
+                     if r["spec_k"] == 0 and r["multi_step"] == 1), None)
         base_tpot = base["tpot_p50_ms"] if base else None
         if base_tpot is None or base_tpot != base_tpot:
             base_tpot = None
@@ -242,8 +277,10 @@ def main():
             tpot = rec["tpot_p50_ms"]
             rec["tpot_speedup"] = (base_tpot / tpot
                                    if base_tpot and tpot == tpot else None)
-            K = rec["spec_k"]
-            records[pol if K == 0 else f"{pol}@spec{K}"] = rec
+            K, m = rec["spec_k"], rec["multi_step"]
+            key = pol if (K == 0 and m == 1) else \
+                (f"{pol}@spec{K}" if K else f"{pol}@m{m}")
+            records[key] = rec
             print("  ".join(_cell(fmt, rec[k]) for k, fmt in COLS))
 
     if args.json:
@@ -253,6 +290,7 @@ def main():
                "seed": args.seed, "chunk": args.chunk,
                "max_step_tokens": args.max_step_tokens,
                "spec_k": spec_ks, "drafter": args.drafter,
+               "multi_step": multi_ms,
                "policies": records}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -313,6 +313,29 @@ def prefill_carry_shardings(cfg: ModelConfig, carry_abs: Any, mesh):
     return walk(carry_abs, [])
 
 
+def serve_step_shardings(n_slots: int, mesh) -> dict:
+    """Decode-lane I/O shardings for the jitted serve steps, pinned beside
+    the slot pool so every step's in/out layouts match — which is also what
+    lets ``donate_argnums`` alias the donated pool buffers in place (XLA
+    only aliases a donated input whose layout equals the output's):
+
+    * ``tokens``  — the [B] last-token vector fed to ``decode_step``;
+    * ``block``   — the [B, m] fused multi-step token block (and the [B, k]
+      device-side top-k indices/values the sampled path fetches instead of
+      full-vocab rows);
+    * ``logits``  — the [B, V] decode logits (stay device-resident; only
+      argmax / top-k products cross to the host).
+
+    The slot axis shards over the data axes; vocab / window dims replicate.
+    """
+    b = batch_entry(n_slots, mesh)
+    return {
+        "tokens": NamedSharding(mesh, P(b)),
+        "block": NamedSharding(mesh, P(b, None)),
+        "logits": NamedSharding(mesh, P(b, None)),
+    }
+
+
 def verify_shardings(n_slots: int, mesh) -> dict:
     """Speculative verify-step I/O shardings, pinned like the decode pool:
     the slot axis of the [B, T] draft tokens, [B, T, V] logits and

@@ -12,6 +12,13 @@ two dMVM roles on one KV block:
 Running (max, denom, acc) streaming-softmax state lives in VMEM scratch and
 persists across the (sequential) seq-block grid dimension, finalising on the
 last block — the same one-pass rescaling the H-tree RPUs pipeline.
+
+Fully-masked key blocks are skipped: each (batch, group) cell reads its
+per-row key limits from SMEM and predicates the whole dMVM body with
+``pl.when(s_idx * bs < max(limits))``, so a short-context slot in a
+long-``max_len`` pool stops paying for ``cdiv(max_len, bs)`` blocks of
+NEG_INF work (the limits are >= 1 in the decode path — ``pos + 1`` — so
+block 0 always computes).
 """
 from __future__ import annotations
 
@@ -46,28 +53,39 @@ def _kernel(len_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[...].astype(jnp.int32)                 # [t*rep, D]
-    k = k_ref[...].astype(jnp.int32)                 # [bs, D]
-    s_int = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.int32)  # [t*rep, bs]
-    scores = (s_int.astype(jnp.float32) * qs_ref[...]
-              * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
-    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
     # per-row limit: t scalar SMEM reads (t is small and static), spread
     # over each draft position's `rep` query rows
-    lim = jnp.stack([len_ref[b_idx, i] for i in range(t)]).reshape(t, 1)
-    lim = jnp.broadcast_to(lim, (t, rep)).reshape(t * rep, 1)
-    scores = jnp.where(pos < lim, scores, NEG_INF)
+    lims = [len_ref[b_idx, i] for i in range(t)]
+    lim_max = lims[0]
+    for li in lims[1:]:
+        lim_max = jnp.maximum(lim_max, li)
 
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
-    p = jnp.exp(scores - m_new)                       # [rep, bs]
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
-    vf = v_ref[...].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
-        p, vf, preferred_element_type=jnp.float32)    # row-wise product (SV)
-    m_ref[...] = m_new
+    # skip fully-masked key blocks: every row of this (batch, group) cell
+    # masks keys at >= its limit, so blocks past the largest limit would
+    # only accumulate exp(NEG_INF) zeros — short-context decode stops
+    # paying for cdiv(max_len, bs) blocks of dead work
+    @pl.when(s_idx * bs < lim_max)
+    def _compute():
+        q = q_ref[...].astype(jnp.int32)             # [t*rep, D]
+        k = k_ref[...].astype(jnp.int32)             # [bs, D]
+        s_int = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.int32)  # [t*rep, bs]
+        scores = (s_int.astype(jnp.float32) * qs_ref[...]
+                  * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
+        pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        lim = jnp.stack(lims).reshape(t, 1)
+        lim = jnp.broadcast_to(lim, (t, rep)).reshape(t * rep, 1)
+        scores = jnp.where(pos < lim, scores, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)                   # [rep, bs]
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        vf = v_ref[...].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, vf, preferred_element_type=jnp.float32)  # row-wise product (SV)
+        m_ref[...] = m_new
 
     @pl.when(s_idx == n_s - 1)
     def _final():

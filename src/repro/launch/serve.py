@@ -24,6 +24,13 @@ in one batched step, roll rejected suffixes back via a cursor rewind):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --continuous --chunk 4 --spec-k 4 --drafter ngram
 
+Fused multi-step decode (``m`` greedy iterations per jitted call with the
+argmax fed back on device — one host round-trip per ``m`` tokens whenever
+the pool is in pure decode steady state):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --continuous --multi-step 4
+
 Either mode accepts ``--mesh DxM`` to serve over a (data, model) device
 mesh (slot pool over data axes, experts/FFN over model; see
 ``dist/sharding.py``).  On a CPU box, force host devices first:
@@ -91,7 +98,8 @@ def _run_continuous(cfg, params, args):
                                    quantize=not args.no_quantize,
                                    policy=args.policy, chunk=args.chunk,
                                    max_step_tokens=args.max_step_tokens,
-                                   spec_k=args.spec_k, drafter=args.drafter)
+                                   spec_k=args.spec_k, drafter=args.drafter,
+                                   multi_step=args.multi_step)
     prompts = [rng.integers(0, cfg.vocab_size,
                             rng.integers(4, args.prompt_len + 1)).tolist()
                for _ in range(args.requests)]
@@ -119,6 +127,14 @@ def _run_continuous(cfg, params, args):
         print(f"spec: k={eng.spec_k} drafter={eng._drafter.name} "
               f"verify_steps={eng.stats['verify_steps']} "
               f"acceptance={eng.acceptance_rate:.2%}")
+    if eng.multi_step > 1:
+        print(f"multi-step: m={eng.multi_step} "
+              f"blocks={eng.stats['multi_blocks']} "
+              f"fused_tokens={eng.stats['multi_tokens']}")
+    steps = max(1, eng.stats["steps"])
+    print(f"host {1e3 * (eng.stats['step_s'] - eng.stats['device_s']) / steps:.2f} ms/step  "
+          f"device {1e3 * eng.stats['device_s'] / steps:.2f} ms/step  "
+          f"decode xfer {eng.stats['decode_xfer_bytes'] / max(1, eng.stats['decode_steps']):.0f} B/decode-step")
     print("sample tokens:", reqs[0].output[:10])
 
 
@@ -150,6 +166,10 @@ def main():
     ap.add_argument("--drafter", default="ngram",
                     help='draft proposer: ngram[:N] (prompt lookup) | mtp '
                          '(multi-token-prediction head, cfg.mtp archs)')
+    ap.add_argument("--multi-step", type=int, default=1, metavar="M",
+                    help="fused multi-step decode: run M greedy iterations "
+                         "per jitted call (argmax fed back on device) when "
+                         "the pool is in pure decode steady state (1 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=None)

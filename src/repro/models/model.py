@@ -128,6 +128,17 @@ def decode_step(params, cfg: ModelConfig, state: dict, token, rt: Runtime):
     return T.decode_step(params, cfg, state, token, rt)
 
 
+def multi_decode_step(params, cfg: ModelConfig, state: dict, token, m: int,
+                      rt: Runtime):
+    """Fused multi-step greedy decode: ``m`` decode iterations in one jitted
+    scan with the argmax fed back on device -> (tokens [B, m], state).  See
+    :func:`repro.models.transformer.multi_decode_step`."""
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "fused multi-step decode targets decoder-only LMs")
+    return T.multi_decode_step(params, cfg, state, token, m, rt)
+
+
 def verify_step(params, cfg: ModelConfig, state: dict, tokens, rt: Runtime):
     """Speculative-decode verify: ``tokens`` [B, T] (last committed token +
     T-1 drafts per slot) -> (logits [B, T, V], hidden [B, T, d], state with

@@ -398,6 +398,42 @@ def decode_step(p: Params, cfg: ModelConfig, state: dict, token: jax.Array,
     return logits, {"groups": tuple(new_groups), "pos": pos + 1}
 
 
+def multi_decode_step(p: Params, cfg: ModelConfig, state: dict,
+                      token: jax.Array, m: int, rt: Runtime,
+                      ) -> tuple[jax.Array, dict]:
+    """Fused multi-step greedy decode: run ``m`` :func:`decode_step`
+    iterations in one jitted ``lax.scan``, feeding each step's argmax back
+    on device — the device-resident decode loop.  ``token`` is the [B]
+    vector of last committed tokens per slot.
+
+    Returns ``(tokens [B, m] int32, state advanced by m)``.  Each scan
+    iteration is exactly one :func:`decode_step` (same K/V append at the
+    per-slot cursor via ``batched_update``, same int8 dMVM attention), and
+    ``jnp.argmax`` breaks ties by lowest token id like the host sampler, so
+    the emitted block is token-identical to ``m`` host-driven single steps
+    — only the per-token host round-trip disappears.  A caller that stops a
+    slot mid-block (EOS / budget) commits the accepted prefix by rewinding
+    that slot's cursor (:func:`rewind_pos`); the overshoot rows die in
+    place under the SLC write-in-place discipline, exactly like a rejected
+    speculative suffix.  The pool needs ``m - 1`` rows of headroom past
+    ``max_len`` so overshoot appends never clamp-wrap onto live rows (the
+    serve engine sizes its pool accordingly).
+
+    Works for any stack :func:`decode_step` accepts (the scan body is the
+    single step), but engines must not fuse SSM/hybrid stacks: their
+    recurrent state cannot rewind, so mid-block stops could not roll back.
+    """
+    def body(carry, _):
+        tok, st = carry
+        logits, st = decode_step(p, cfg, st, tok, rt)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (nxt, st), nxt
+
+    (_, new_state), toks = jax.lax.scan(
+        body, (jnp.asarray(token, jnp.int32), state), None, length=m)
+    return toks.T, new_state                              # [B, m]
+
+
 # ---------------------------------------------------------------------------
 # speculative decode: batched multi-token verify + cursor rollback + MTP draft
 # ---------------------------------------------------------------------------

@@ -22,6 +22,19 @@ into one engine step, so TPOT of running requests never absorbs a whole
 prompt.  Admission order and preemption are delegated to a pluggable
 ``SchedulingPolicy`` (FIFO / priority / SJF / fair-share).
 
+The steady-state decode loop is *device-resident and transfer-minimal*:
+every jitted serve step donates its decode-state argument, so the
+``[layers, n_slots, S, H, D]`` int8 SLC pool (and the chunked-prefill
+carry) update in place instead of being copied per token; greedy tokens
+are argmax'd on device and only ``[n_slots]`` (or ``[n_slots, m]``) int32
+vectors cross the host boundary; sampled slots get a device-side top-k
+pre-select (``[n_slots, k]`` values+indices instead of full-vocab rows,
+bit-identical streams).  With ``multi_step=m`` the engine *fuses* ``m``
+greedy decode iterations into one jitted scan whenever the pool is in
+pure decode steady state (no queue, no prefill, no replay, all greedy),
+paying one host round-trip per ``m`` tokens; EOS/budget overshoot unwinds
+through the same cursor rewind the speculative lane uses.
+
 With ``spec_k=k`` the continuous engine adds a *speculative decode lane*:
 a drafter proposes ``k`` tokens per decoding slot, one batched verify step
 scores all ``k+1`` positions against the pooled SLC cache, and each slot
@@ -94,8 +107,11 @@ class Engine:
                 self.cfg, self.params, self.qparams, self.rt)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, self.cfg, b, self.max_len, self.rt))
+        # the decode state is donated: each step's int8 SLC pool updates in
+        # place instead of being copied per token (the caller reassigns)
         self._decode = jax.jit(
-            lambda p, s, t: M.decode_step(p, self.cfg, s, t, self.rt))
+            lambda p, s, t: M.decode_step(p, self.cfg, s, t, self.rt),
+            donate_argnums=(1,))
 
     def generate(self, batch: dict, steps: int, greedy: bool = True,
                  rng: jax.Array | None = None):
@@ -194,7 +210,9 @@ class ContinuousBatchingEngine:
                  chunk: int | None = None,
                  max_step_tokens: int | None = None,
                  spec_k: int = 0,
-                 drafter: str | Drafter | None = "ngram"):
+                 drafter: str | Drafter | None = "ngram",
+                 multi_step: int = 1,
+                 topk_preselect: bool = True):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -217,6 +235,12 @@ class ContinuousBatchingEngine:
         # SSM/hybrid recurrent state cannot rewind: like `chunk`, the spec
         # lane silently falls back to the exact one-token decode there
         self.spec_k = 0 if self._has_ssm else int(spec_k)
+        if multi_step < 1:
+            raise ValueError("multi_step must be >= 1 (1 = per-token loop)")
+        # fused multi-step decode also leans on the cursor rewind to unwind
+        # EOS/budget overshoot, so SSM/hybrid stacks keep the 1-token loop
+        self.multi_step = 1 if self._has_ssm else int(multi_step)
+        self.topk_preselect = bool(topk_preselect)
         if self.chunk:
             self.max_step_tokens = (max_step_tokens if max_step_tokens
                                     else n_slots + self.chunk)
@@ -229,49 +253,76 @@ class ContinuousBatchingEngine:
             self.max_step_tokens = max_step_tokens
         self.scheduler = Scheduler(n_slots, max_len, policy)
         self.policy = self.scheduler.policy
-        # the pool keeps spec_k rows of headroom past max_len so a verify
-        # window starting at the last live position never clamp-wraps its
-        # in-place appends onto valid rows
-        self._state_len = max_len + self.spec_k
+        # the pool keeps headroom rows past max_len so neither a verify
+        # window nor a fused multi-step block starting at the last live
+        # position ever clamp-wraps its in-place appends onto valid rows
+        self._state_len = max_len + max(self.spec_k, self.multi_step - 1)
         self.state = M.init_decode_state(cfg, n_slots, self._state_len)
         self._last_tok = np.zeros((n_slots,), np.int32)
         self._slot_pos = np.zeros((n_slots,), np.int64)   # host cursor mirror
         self._carries: dict[int, Any] = {}        # slot -> prefill carry
         self._rngs: dict[int, np.random.Generator] = {}   # rid -> sampler
+        self._topk_fns: dict[int, Any] = {}       # k -> jitted lax.top_k
+        self._io: dict[str, Any] | None = None    # mesh decode-I/O shardings
         self._next_rid = 0
         self._t0 = time.perf_counter()
         self.stats = {"steps": 0, "decode_steps": 0, "prefill_tokens": 0,
                       "chunks": 0, "max_step_prefill_tokens": 0,
                       "max_step_total_tokens": 0, "preemptions": 0,
                       "verify_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0}
+                      "spec_accepted": 0, "multi_blocks": 0,
+                      "multi_tokens": 0, "xfer_bytes": 0,
+                      "decode_xfer_bytes": 0, "device_s": 0.0, "step_s": 0.0}
 
+        # every serve-path step donates its decode-state / carry argument:
+        # the [layers, n_slots, S, H, D] int8 K/V pool (and the chunked
+        # prefill's float carry) update in place instead of being copied
+        # per call.  Each call site reassigns the engine's reference, so
+        # the donated (deleted) buffer is never touched again.
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len, self.rt))
         if self.chunk:
-            self._carry0 = M.init_prefill_carry(cfg, max_len + self.chunk)
+            # a fresh carry per admission: donation consumes the previous
+            # one, so a shared zero template would die on first use
+            self._carry_init = jax.jit(
+                lambda: M.init_prefill_carry(cfg, max_len + self.chunk))
             self._chunk_fn = jax.jit(
-                lambda p, c, t, n: M.prefill_chunk(p, cfg, c, t, n, self.rt))
+                lambda p, c, t, n: M.prefill_chunk(p, cfg, c, t, n, self.rt),
+                donate_argnums=(1,))
             self._finalize_write = jax.jit(
                 lambda s, slot, c: T.write_slot(
-                    s, slot, M.finalize_prefill_carry(cfg, c, max_len)))
+                    s, slot, M.finalize_prefill_carry(cfg, c, max_len)),
+                donate_argnums=(0,))
         if self.spec_k:
             self._drafter = make_drafter(drafter, cfg, self.rt, self.spec_k)
             self._h_last = (np.zeros((n_slots, cfg.d_model), np.float32)
                             if self._drafter.kind == "model" else None)
             self._verify = jax.jit(
-                lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt))
+                lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt),
+                donate_argnums=(1,))
+        if self.multi_step > 1:
+            self._multi = jax.jit(
+                lambda p, s, t: M.multi_decode_step(
+                    p, cfg, s, t, self.multi_step, self.rt),
+                donate_argnums=(1,))
         if self.rt.mesh is None:
             self._decode = jax.jit(
-                lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt))
-            self._write = jax.jit(T.write_slot)
+                lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
+                donate_argnums=(1,))
+            self._write = jax.jit(T.write_slot, donate_argnums=(0,))
         else:
             self._shard_over_mesh()
 
     # -- sharded-serve path -----------------------------------------------
     def _shard_over_mesh(self) -> None:
         """Place params, QLC weights and the slot pool on ``rt.mesh`` and
-        pin the decode step's in/out shardings to the pool layout."""
+        pin every serve step's in/out shardings to the pool layout.
+
+        The pins serve double duty: slot churn (``write_slot`` admissions)
+        never migrates the pool, and — because XLA only aliases a donated
+        input whose layout equals the output's — identical in/out shardings
+        are what lets ``donate_argnums`` keep the SLC pool updating in
+        place on the mesh too (``dist.sharding.serve_step_shardings``)."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.dist import sharding as SH
         cfg, mesh = self.cfg, self.rt.mesh
@@ -282,36 +333,49 @@ class ContinuousBatchingEngine:
         ssh = SH.decode_state_shardings(
             cfg, pool_shape, jax.eval_shape(lambda: self.state), mesh)
         self.state = jax.device_put(self.state, ssh)
-        b = SH.batch_entry(self.n_slots, mesh)
-        tok_sh = NamedSharding(mesh, P(b))
-        logits_sh = NamedSharding(mesh, P(b, None))
+        self._io = SH.serve_step_shardings(self.n_slots, mesh)
+        self._io["pos"] = NamedSharding(mesh, P())
         self._decode = jax.jit(
             lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
-            in_shardings=(qsh, ssh, tok_sh), out_shardings=(logits_sh, ssh))
+            in_shardings=(qsh, ssh, self._io["tokens"]),
+            out_shardings=(self._io["logits"], ssh), donate_argnums=(1,))
+        if self.multi_step > 1:
+            self._multi = jax.jit(
+                lambda p, s, t: M.multi_decode_step(
+                    p, cfg, s, t, self.multi_step, self.rt),
+                in_shardings=(qsh, ssh, self._io["tokens"]),
+                out_shardings=(self._io["block"], ssh), donate_argnums=(1,))
         if self.spec_k:
             # the verify step's I/O pins beside the pool so the spec lane
             # never migrates the SLC rows (same rule as the decode step)
             vsh = SH.verify_shardings(self.n_slots, mesh)
+            self._io["verify_tokens"] = vsh["tokens"]
             self._verify = jax.jit(
                 lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt),
                 in_shardings=(qsh, ssh, vsh["tokens"]),
-                out_shardings=(vsh["logits"], vsh["hidden"], ssh))
+                out_shardings=(vsh["logits"], vsh["hidden"], ssh),
+                donate_argnums=(1,))
         # admissions write a replicated B=1 row into the sharded pool; the
         # out_shardings pin keeps the pool resident (no migration per admit)
-        self._write = jax.jit(T.write_slot, out_shardings=ssh)
+        self._write = jax.jit(T.write_slot, out_shardings=ssh,
+                              donate_argnums=(0,))
         if self.chunk:
             csh = SH.prefill_carry_shardings(
-                cfg, jax.eval_shape(lambda: self._carry0), mesh)
-            self._carry0 = jax.device_put(self._carry0, csh)
+                cfg, jax.eval_shape(self._carry_init), mesh)
+            self._carry_init = jax.jit(
+                lambda: M.init_prefill_carry(cfg, self.max_len + self.chunk),
+                out_shardings=csh)
             # pin the carry's layout across chunk steps (heads stay over
-            # `model`, matching the pool so finalize->write never reshards)
+            # `model`, matching the pool so finalize->write never reshards;
+            # matching in/out is also the donation-alias condition)
             self._chunk_fn = jax.jit(
                 lambda p, c, t, n: M.prefill_chunk(p, cfg, c, t, n, self.rt),
-                out_shardings=(NamedSharding(mesh, P()), csh))
+                out_shardings=(NamedSharding(mesh, P()), csh),
+                donate_argnums=(1,))
             self._finalize_write = jax.jit(
                 lambda s, slot, c: T.write_slot(
                     s, slot, M.finalize_prefill_carry(cfg, c, self.max_len)),
-                out_shardings=ssh)
+                out_shardings=ssh, donate_argnums=(0,))
 
     # -- request intake ---------------------------------------------------
     def submit(self, prompt: Iterable[int], max_new_tokens: int,
@@ -342,42 +406,138 @@ class ContinuousBatchingEngine:
         timestamps share the caller's timebase."""
         self._t0 = time.perf_counter()
 
+    # -- host<->device transfer discipline --------------------------------
+    # Every steady-state transfer goes through these two helpers: transfers
+    # are *explicit* (jax.device_get / jax.device_put, so serving survives
+    # a `jax.transfer_guard("disallow")` scope) and metered — `xfer_bytes`
+    # counts everything, `decode_xfer_bytes` only the decode lane, which
+    # the transfer-discipline regression test pins to O(n_slots * m) for
+    # greedy and O(n_slots * k) for sampled decode.
+    def _fetch(self, x, decode: bool = False):
+        """Explicit device->host fetch (counted; timed as device wait)."""
+        t0 = time.perf_counter()
+        out = jax.device_get(x)
+        self.stats["device_s"] += time.perf_counter() - t0
+        n = sum(a.nbytes for a in jax.tree.leaves(out))
+        self.stats["xfer_bytes"] += n
+        if decode:
+            self.stats["decode_xfer_bytes"] += n
+        return out
+
+    def _push(self, arr: np.ndarray, sharding=None, decode: bool = False):
+        """Explicit host->device transfer (counted)."""
+        self.stats["xfer_bytes"] += arr.nbytes
+        if decode:
+            self.stats["decode_xfer_bytes"] += arr.nbytes
+        if sharding is not None:
+            return jax.device_put(arr, sharding)
+        return jax.device_put(arr)
+
+    def _dev(self, fn, *args):
+        """Dispatch a jitted step under the device-time clock (the
+        host/device breakdown the serve benchmark reports)."""
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self.stats["device_s"] += time.perf_counter() - t0
+        return out
+
+    def _device_topk(self, logits, k: int):
+        """jitted ``lax.top_k`` over the vocab axis (cached per k): the
+        sampled decode path's pre-select, shipping [B, k] values+indices
+        to the host sampler instead of full-vocab rows.  XLA's top_k
+        breaks ties in favour of lower indices — the same total order as
+        the host's stable sort — so pre-selected sampling stays
+        bit-identical to the full-vocab path."""
+        fn = self._topk_fns.get(k)
+        if fn is None:
+            fn = self._topk_fns[k] = jax.jit(
+                lambda lg: jax.lax.top_k(lg, k))
+        return self._dev(fn, logits)
+
     # -- per-request sampling ---------------------------------------------
-    def _sample_token(self, req: Request, row: np.ndarray) -> int:
-        """Next token for one slot: greedy argmax at temperature 0, else
-        top-k temperature sampling from a per-request deterministic stream
-        (seeded by ``req.seed``, falling back to the rid).  One uniform
-        draw per token, so a preempted request's replay re-consumes the
-        stream identically."""
-        if req.temperature <= 0:
-            return int(row.argmax())
+    def _rng_for(self, req: Request) -> np.random.Generator:
         rng = self._rngs.get(req.rid)
         if rng is None:
             seed = req.seed if req.seed is not None else req.rid
             rng = self._rngs[req.rid] = np.random.default_rng(seed)
-        logits = row.astype(np.float64) / req.temperature
-        if req.top_k is not None and req.top_k < logits.size:
-            # exactly top_k candidates: a `logits >= kth` test admits every
-            # token tied at the k-th logit (> top_k of them).  Stable sort
-            # breaks ties deterministically (lowest token id wins); ids are
-            # restored to ascending order for the cumulative draw.
-            order = np.argsort(-logits, kind="stable")[:req.top_k]
-            idx = np.sort(order)
-        else:
-            idx = np.arange(logits.size)
-        z = logits[idx] - logits[idx].max()
+        return rng
+
+    def _draw_from(self, req: Request, idx: np.ndarray,
+                   logits: np.ndarray) -> int:
+        """One cumulative draw over candidate ids ``idx`` (ascending) with
+        aligned f64 temperature-scaled logits.  One uniform per token, so a
+        preempted request's replay re-consumes the stream identically."""
+        z = logits - logits.max()
         p = np.exp(z)
         p /= p.sum()
-        u = rng.random()
+        u = self._rng_for(req).random()
         j = min(int(np.searchsorted(np.cumsum(p), u, side="right")),
                 len(idx) - 1)
         return int(idx[j])
 
+    def _sample_token(self, req: Request, row: np.ndarray) -> int:
+        """Next token for one slot from a full-vocab logits row: greedy
+        argmax at temperature 0, else top-k temperature sampling from a
+        per-request deterministic stream (seeded by ``req.seed``, falling
+        back to the rid)."""
+        if req.temperature <= 0:
+            return int(row.argmax())
+        logits = row.astype(np.float64) / req.temperature
+        if req.top_k is not None and req.top_k < logits.size:
+            # exactly top_k candidates: a `logits >= kth` test admits every
+            # token tied at the k-th logit (> top_k of them).  Selection is
+            # O(V): argpartition pins the k-th largest value, every id
+            # strictly above it is in, and the ids tied at it fill the tail
+            # lowest-id-first — the same candidate set the old full-vocab
+            # stable argsort picked, without the O(V log V) sort.
+            k = req.top_k
+            part = np.argpartition(-logits, k - 1)[:k]
+            vth = logits[part].min()
+            above = np.nonzero(logits > vth)[0]
+            ties = np.nonzero(logits == vth)[0][:k - above.size]
+            idx = np.sort(np.concatenate([above, ties]))
+        else:
+            idx = np.arange(logits.size)
+        return self._draw_from(req, idx, logits[idx])
+
+    def _sample_candidates(self, req: Request, vals: np.ndarray,
+                           idx: np.ndarray) -> int:
+        """:meth:`_sample_token` over device-pre-selected candidates:
+        ``vals``/``idx`` are the row's top-k logits descending (ties lowest
+        id first — `lax.top_k`'s order matches the stable sort), so the
+        first ``req.top_k`` entries are exactly the full-vocab candidate
+        set and the f64 softmax/cumsum pipeline below is bit-identical."""
+        if req.temperature <= 0:
+            return int(idx[0])                    # argmax == top-1
+        k = len(idx) if req.top_k is None else min(req.top_k, len(idx))
+        order = np.asarray(idx[:k])
+        perm = np.argsort(order, kind="stable")   # ids back to ascending
+        logits = vals[:k].astype(np.float64)[perm] / req.temperature
+        return self._draw_from(req, order[perm], logits)
+
     def _next_tokens(self, logits, dec: list[tuple[int, Request]]) -> np.ndarray:
+        """Next token per decoding slot from the device-resident [B, V]
+        logits.  Greedy slots never see the logits (argmax on device, one
+        int32 per slot crosses); sampled slots with bounded ``top_k`` get
+        the device-side pre-select ([B, k] values+indices); only a sampled
+        request with ``top_k=None`` (full-vocab sampling) falls back to
+        shipping its whole row."""
         if all(req.temperature <= 0 for _, req in dec):
-            return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
-        rows = np.asarray(logits, np.float32)
+            return self._fetch(jnp.argmax(logits, -1).astype(jnp.int32),
+                               decode=True)
         out = np.zeros((self.n_slots,), np.int64)
+        ks = [req.top_k for _, req in dec if req.temperature > 0]
+        # pre-select only for genuinely bounded top-k (k < V): at k >= V it
+        # would sort and ship the whole vocab twice over
+        if self.topk_preselect and all(
+                k is not None and k < self.cfg.vocab_size for k in ks):
+            kmax = max(ks)
+            vals, idx = self._fetch(self._device_topk(logits, kmax),
+                                    decode=True)
+            for slot, req in dec:
+                out[slot] = self._sample_candidates(req, vals[slot], idx[slot])
+            return out
+        rows = self._fetch(logits, decode=True).astype(np.float32)
         for slot, req in dec:
             out[slot] = self._sample_token(req, rows[slot])
         return out
@@ -389,13 +549,26 @@ class ContinuousBatchingEngine:
         b = self.prefill_bucket
         return min(self.max_len, -(-n // b) * b)
 
+    def _first_token(self, req: Request, logits) -> int:
+        """First token from the prefill logits ([1, V]): argmax stays on
+        device for greedy, bounded sampling gets the top-k pre-select —
+        the full row only crosses for unbounded (``top_k=None``) sampling."""
+        if req.temperature <= 0:
+            return int(self._fetch(jnp.argmax(logits, -1))[0])
+        if (self.topk_preselect and req.top_k is not None
+                and req.top_k < self.cfg.vocab_size):
+            vals, idx = self._fetch(self._device_topk(logits, req.top_k))
+            return self._sample_candidates(req, vals[0], idx[0])
+        return self._sample_token(
+            req, self._fetch(logits)[0].astype(np.float32))
+
     def _emit_first(self, req: Request, logits) -> None:
         """A request's prefill just completed: emit its first token (or
         re-feed the recorded one when resuming after preemption) and move
         it to DECODING."""
         # the draw always runs so a resumed request's sampling stream stays
         # aligned with its original run
-        tok = self._sample_token(req, np.asarray(logits, np.float32)[0])
+        tok = self._first_token(req, logits)
         if req.output:                     # resumed: recorded token wins
             tok = req.output[0]
             req.replay_pos = 1
@@ -426,10 +599,12 @@ class ContinuousBatchingEngine:
         if padded != plen or not self._has_ssm:
             batch["lengths"] = jnp.array([plen], jnp.int32)
         try:
-            logits, one = self._prefill(self.params, batch)
-            self.state = self._write(self.state, jnp.int32(req.slot), one)
+            logits, one = self._dev(self._prefill, self.params, batch)
+            self.state = self._dev(self._write, self.state,
+                                   jnp.int32(req.slot), one)
         except Exception as e:                        # noqa: BLE001
             self._fail(req, f"{type(e).__name__}: {e}")
+            self._check_pool_alive(e)
             return 0
         req.prefill_pos = plen
         self._emit_first(req, logits)
@@ -443,21 +618,36 @@ class ContinuousBatchingEngine:
         toks = np.zeros((1, self.chunk), np.int32)
         toks[0, :n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
         try:
-            logits, self._carries[slot] = self._chunk_fn(
-                self.params, self._carries[slot], jnp.asarray(toks),
-                jnp.int32(n))
+            logits, self._carries[slot] = self._dev(
+                self._chunk_fn, self.params, self._carries[slot],
+                jnp.asarray(toks), jnp.int32(n))
             req.prefill_pos += n
             self.stats["chunks"] += 1
             if req.prefill_pos >= req.prompt_len:
                 carry = self._carries.pop(slot)
-                self.state = self._finalize_write(
-                    self.state, jnp.int32(slot), carry)
+                self.state = self._dev(self._finalize_write, self.state,
+                                       jnp.int32(slot), carry)
                 self._emit_first(req, logits)
         except Exception as e:                        # noqa: BLE001
             self._carries.pop(slot, None)
             self._fail(req, f"{type(e).__name__}: {e}")
+            self._check_pool_alive(e)
             return 0
         return n
+
+    def _check_pool_alive(self, cause: Exception) -> None:
+        """Admission is exception-safe (one failed request, serving
+        continues) *unless* the failing call had already consumed the
+        donated pool state mid-execution — then the engine cannot serve
+        the other residents and must fail loudly now, not with a confusing
+        'Array has been deleted' on the next decode step.  Compile-time
+        and pre-dispatch failures (the common cases) never consume the
+        donated buffer, so they keep the per-request isolation."""
+        if jax.tree.leaves(self.state)[0].is_deleted():
+            raise RuntimeError(
+                "the decode pool was consumed by a failed donated write; "
+                "the engine cannot continue serving its residents"
+            ) from cause
 
     def _preempt(self, req: Request, now: float) -> None:
         """Bump a resident back to the queue (recompute-style): generated
@@ -478,6 +668,13 @@ class ContinuousBatchingEngine:
     # -- one serving iteration --------------------------------------------
     def step(self) -> bool:
         """Run one engine iteration; returns True if any work was done."""
+        t0 = time.perf_counter()
+        try:
+            return self._step()
+        finally:
+            self.stats["step_s"] += time.perf_counter() - t0
+
+    def _step(self) -> bool:
         now = self._now()
         self.stats["steps"] += 1
         step_pf = 0
@@ -492,7 +689,12 @@ class ContinuousBatchingEngine:
                 self._preempt(req, now)
         for req in self.scheduler.admit(now):
             if self.chunk:
-                self._carries[req.slot] = self._carry0
+                # exception-safe like _admit_atomic: a failed carry
+                # allocation fails one request, never leaks the slot
+                try:
+                    self._carries[req.slot] = self._dev(self._carry_init)
+                except Exception as e:                # noqa: BLE001
+                    self._fail(req, f"{type(e).__name__}: {e}")
             else:
                 step_pf += self._admit_atomic(req)
         if self.chunk:
@@ -531,11 +733,17 @@ class ContinuousBatchingEngine:
         if self.spec_k:
             self._spec_decode(dec)
             return True
-        logits, self.state = self._decode(
-            self.qparams, self.state, jnp.asarray(self._last_tok))
+        if self._can_fuse(dec):
+            self._multi_decode(dec)
+            return True
+        logits, self.state = self._dev(
+            self._decode, self.qparams, self.state,
+            self._push(self._last_tok,
+                       self._io and self._io["tokens"], decode=True))
         nxt = self._next_tokens(logits, dec)
         now = self._now()
         for slot, req in dec:
+            self._slot_pos[slot] += 1      # host mirror of the device cursor
             if req.replay_pos < len(req.output):
                 # resuming after preemption: this decode recomputed a token
                 # we already emitted — re-feed the recorded one, no append
@@ -551,6 +759,68 @@ class ContinuousBatchingEngine:
             if req.should_stop():
                 self._retire(req, now)
         return True
+
+    # -- fused multi-step decode lane ---------------------------------------
+    def _can_fuse(self, dec: list[tuple[int, Request]]) -> bool:
+        """Enter the device-resident lane only in pure decode steady state:
+        no queued request (nothing to admit, nothing for a policy to
+        preempt for), no in-flight prefill, every resident greedy and past
+        its replay.  Anything else falls back to the single-step loop, so
+        scheduling decisions are never deferred by a fused block."""
+        if self.multi_step <= 1 or self.scheduler.queue:
+            return False
+        if any(r.state is not RequestState.DECODING
+               for r in self.scheduler.active.values()):
+            return False
+        return all(req.temperature <= 0 and req.replay_pos >= len(req.output)
+                   for _, req in dec)
+
+    def _multi_decode(self, dec: list[tuple[int, Request]]) -> None:
+        """One fused block: ``multi_step`` greedy decode iterations run in a
+        single jitted scan with the argmax fed back on device; the host
+        sees only the [n_slots, m] int32 token block.  A slot that stops
+        mid-block (EOS or budget) commits its emitted prefix and the
+        overshoot unwinds exactly like a rejected speculative suffix: the
+        per-slot cursor rewinds (:func:`transformer.rewind_pos`) and the
+        dead rows are overwritten in place by the next resident."""
+        m = self.multi_step
+        self.stats["decode_steps"] += m - 1       # step() counted one
+        self.stats["multi_blocks"] += 1
+        blk_dev, self.state = self._dev(
+            self._multi, self.qparams, self.state,
+            self._push(self._last_tok,
+                       self._io and self._io["tokens"], decode=True))
+        blk = self._fetch(blk_dev, decode=True)   # [n_slots, m] int32
+        now = self._now()
+        stopped_early = False
+        block_tokens = 0
+        for slot, req in dec:
+            emitted = 0
+            for i in range(m):
+                tok = int(blk[slot, i])
+                req.output.append(tok)
+                req.replay_pos = len(req.output)
+                self._last_tok[slot] = tok
+                self.policy.on_tokens(req, 1)
+                emitted += 1
+                if req.should_stop():
+                    self._retire(req, now)
+                    break
+            self._slot_pos[slot] += emitted
+            self.stats["multi_tokens"] += emitted
+            block_tokens += emitted
+            if emitted < m:
+                stopped_early = True
+        # a fused iteration emits up to len(dec) * m tokens: keep the
+        # per-iteration stat honest (fusion never competes with prefill
+        # work — it only runs when no PREFILLING slot or queue exists, so
+        # the chunked token budget's decode-vs-prefill packing is unaffected)
+        self.stats["max_step_total_tokens"] = max(
+            self.stats["max_step_total_tokens"], block_tokens)
+        if stopped_early:
+            # commit each stopped slot's emitted prefix; rows past it are
+            # dead in-place entries until the next admission overwrites them
+            self.state = T.rewind_pos(self.state, self._pos_device())
 
     # -- speculative decode lane -------------------------------------------
     def _draft_for(self, req: Request, dr) -> list[int]:
@@ -579,23 +849,53 @@ class ContinuousBatchingEngine:
         toks[:, 0] = self._last_tok
         dr = None
         if self._drafter.kind == "model":
-            dr = np.asarray(self._drafter.draft_batch(
-                self.qparams, self._h_last, self._last_tok, self._slot_pos))
+            # the draft inputs (hidden carry, last tokens, cursors) cross
+            # explicitly and metered like every other decode-lane transfer
+            rep = self._io and self._io["pos"]     # replicated on the mesh
+            dr = self._fetch(self._dev(
+                self._drafter.draft_batch, self.qparams,
+                self._push(self._h_last, rep, decode=True),
+                self._push(self._last_tok, rep, decode=True),
+                self._push(np.asarray(self._slot_pos, np.int32), rep,
+                           decode=True)), decode=True)
         drafts: dict[int, list[int]] = {}
         for slot, req in dec:
             drafts[slot] = self._draft_for(req, dr)
             toks[slot, 1:] = drafts[slot]
-        logits, hidden, self.state = self._verify(
-            self.qparams, self.state, jnp.asarray(toks))
+        logits, hidden, self.state = self._dev(
+            self._verify, self.qparams, self.state,
+            self._push(toks, self._io and self._io["verify_tokens"],
+                       decode=True))
         self.stats["verify_steps"] += 1
+        rows = greedy_tok = vals_h = idx_h = None
         if all(req.temperature <= 0 for _, req in dec):
             # all-greedy: argmax on device, ship [B, T] ints instead of the
             # full [B, T, V] logits (same fast path as _next_tokens)
-            rows = None
-            greedy_tok = np.asarray(jnp.argmax(logits, -1), np.int64)
+            greedy_tok = self._fetch(jnp.argmax(logits, -1), decode=True)
         else:
-            rows, greedy_tok = np.asarray(logits, np.float32), None
-        hid = (np.asarray(hidden, np.float32)
+            ks = [req.top_k for _, req in dec if req.temperature > 0]
+            if self.topk_preselect and all(
+                    kk is not None and kk < self.cfg.vocab_size for kk in ks):
+                # sampled verify fetch shrinks the same way as the decode
+                # lane: [B, T, kmax] values+indices instead of full vocab
+                kmax = max(ks)
+                vals_h, idx_h = self._fetch(
+                    self._device_topk(logits, kmax), decode=True)
+            else:
+                rows = self._fetch(logits, decode=True).astype(np.float32)
+
+        def row_token(req: Request, slot: int, i: int) -> int:
+            """Emit (or discard, for replay-stream alignment) the token the
+            model chose at verify row i — identical across the three fetch
+            shapes (device argmax ints / top-k candidates / full rows)."""
+            if greedy_tok is not None:
+                return int(greedy_tok[slot, i])
+            if rows is not None:
+                return self._sample_token(req, rows[slot, i])
+            return self._sample_candidates(req, vals_h[slot, i],
+                                           idx_h[slot, i])
+
+        hid = (self._fetch(hidden, decode=True).astype(np.float32)
                if self._drafter.kind == "model" else None)
         now = self._now()
         for slot, req in dec:
@@ -611,12 +911,11 @@ class ContinuousBatchingEngine:
                     # request re-consumes one draw per recorded token and
                     # its stream stays aligned — same rule as _next_tokens
                     if req.temperature > 0:
-                        self._sample_token(req, rows[slot, i])
+                        row_token(req, slot, i)
                     tok = req.output[req.replay_pos]
                     req.replay_pos += 1
                 else:
-                    tok = (int(greedy_tok[slot, i]) if rows is None
-                           else self._sample_token(req, rows[slot, i]))
+                    tok = row_token(req, slot, i)
                     req.output.append(tok)
                     req.replay_pos = len(req.output)
                     self.policy.on_tokens(req, 1)
@@ -640,11 +939,8 @@ class ContinuousBatchingEngine:
         self.state = T.rewind_pos(self.state, self._pos_device())
 
     def _pos_device(self):
-        pos = jnp.asarray(np.asarray(self._slot_pos, np.int32))
-        if self.rt.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            return jax.device_put(pos, NamedSharding(self.rt.mesh, P()))
-        return pos
+        return self._push(np.asarray(self._slot_pos, np.int32),
+                          self._io and self._io["pos"], decode=True)
 
     @property
     def acceptance_rate(self) -> float:

@@ -360,6 +360,46 @@ class TestShardedServe:
         """)
         assert out.count("SPEC_PARITY_OK") == 2
 
+    def test_sharded_multi_step_token_identical(self):
+        """The fused multi-step lane over the mesh must match the
+        single-device *single-step* engine token-for-token: the fused
+        block's in/out shardings pin beside the pool
+        (dist.sharding.serve_step_shardings) so the donated SLC pool
+        aliases in place, the [B, m] token block is the only decode fetch,
+        and the overshoot rollback is a replicated pos rewrite.  Covered
+        with chunked prefill riding along (fusion must wait out PREFILLING
+        slots) and a trace whose budgets stop mid-block."""
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            cfg = ARCHS["llama3-8b"].reduced()
+            params = M.init_params(jax.random.key(0), cfg)
+            rng = np.random.default_rng(11)
+            prompts = [rng.integers(0, cfg.vocab_size,
+                                    rng.integers(3, 15)).tolist()
+                       for _ in range(6)]
+            budgets = [int(rng.integers(2, 8)) for _ in range(6)]
+            ref = ContinuousBatchingEngine(
+                cfg, params, n_slots=4,
+                max_len=32).generate_all(prompts, budgets)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            rt = Runtime(mesh=mesh, data_axes=("data",),
+                         serve_resident_moe=True)
+            for chunk in (None, 4):
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32, chunk=chunk,
+                    multi_step=4, rt=rt)
+                got = eng.generate_all(prompts, budgets)
+                assert got == ref, (chunk, got, ref)
+                assert eng.stats["multi_blocks"] > 0, chunk
+                print("MULTI_PARITY_OK", chunk,
+                      "blocks=%d" % eng.stats["multi_blocks"])
+        """)
+        assert out.count("MULTI_PARITY_OK") == 2
+
     def test_sharded_chunked_prefill_token_identical(self):
         """Chunked prefill over the mesh must match the single-device
         *unchunked* engine: the carry stays pinned

@@ -95,6 +95,8 @@ class TestDecodeAttn:
         (2, 1024, 4, 2, 64, 700),
         (2, 512, 2, 4, 128, 100),
         (1, 300, 8, 1, 64, 299),      # non-aligned seq
+        (2, 1024, 2, 2, 64, 3),       # tiny length: tail blocks skipped
+        (1, 2048, 1, 1, 64, 1),       # single live key, 3 of 4 blocks dead
     ])
     def test_matches_oracle(self, b, s, g, rep, d, length):
         k1, k2, k3 = jax.random.split(jax.random.key(b * s + g + d), 3)
@@ -105,6 +107,22 @@ class TestDecodeAttn:
         v_q, v_s = quant.quantize_kv(v)
         ln = jnp.array(length, jnp.int32)
         want = da_ref.ref(q, k_q, k_s, v_q, v_s, ln)
+        got = da_ops.decode_attention(q, k_q, k_s, v_q, v_s, ln)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-6)
+
+    def test_ragged_tiny_lengths_match_oracle(self):
+        """Per-slot [B] lengths where only one row reaches past the first
+        key block: the block-skip guard (`s_idx * bs < max(limits)`) must
+        drop dead blocks per batch row without perturbing the long row."""
+        b, s, g, d = 3, 1024, 2, 64
+        q = jax.random.normal(jax.random.key(9), (b, 1, g, d))
+        k = jax.random.normal(jax.random.key(10), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(11), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        ln = jnp.array([2, 900, 1], jnp.int32)
+        want = da_ref.ref(q, k_q, k_s, v_q, v_s, ln[:, None, None, None])
         got = da_ops.decode_attention(q, k_q, k_s, v_q, v_s, ln)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=3e-5, atol=3e-6)
