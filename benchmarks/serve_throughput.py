@@ -25,6 +25,15 @@ host/device wall-time breakdown (``host_ms`` / ``device_ms``) and the
 per-decode-step host transfer volume (``xfer_bytes``) — the transfer-
 discipline trajectory (O(slots*m) greedy, O(slots*k) sampled).
 
+``--serve`` swaps the in-process replay for the *live* async front-end:
+per-request coroutines sleep until their Poisson arrival and submit to a
+running ``AsyncServer`` while the step loop executes in its worker thread
+— the measured path includes the real admission handoff and stream pumps.
+``--parity`` instead runs the closed-loop check: the streamed output must
+be token-identical to ``generate_all`` on an identically-configured
+engine for every policy (with ``--chunk``/``--spec-k`` honoured).  All
+timing in every mode rides the engine's monotonic clock.
+
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
           [--arch llama3-8b] [--requests 24] [--rate 20] [--slots 4] \
           [--policies fifo,sjf,priority,fair] [--chunk 8] \
@@ -39,6 +48,7 @@ Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import time
 
@@ -112,13 +122,17 @@ def warm_engine(eng, args):
 
 
 def replay_trace(eng, arrivals, prompts, budgets, priorities, users):
-    """Open-loop replay: submit at trace time, step until drained."""
+    """Open-loop replay: submit at trace time, step until drained.
+
+    Time is read from the engine's own monotonic clock (``eng.now()``,
+    re-zeroed here) — arrivals, admissions and the wall measurement share
+    one timebase, so queue-delay/TTFT deltas cannot be skewed by mixing
+    clocks (or by NTP stepping a wall clock mid-run)."""
     reqs = []
     eng.reset_clock()
-    t0 = time.perf_counter()
     next_i = 0
     while next_i < len(prompts) or eng.scheduler.has_work():
-        now = time.perf_counter() - t0
+        now = eng.now()
         while next_i < len(prompts) and arrivals[next_i] <= now:
             reqs.append(eng.submit(prompts[next_i], int(budgets[next_i]),
                                    arrival_time=float(arrivals[next_i]),
@@ -128,8 +142,77 @@ def replay_trace(eng, arrivals, prompts, budgets, priorities, users):
         if not eng.step() and next_i < len(prompts):
             # idle: nothing resident yet, next arrival still in the future
             time.sleep(min(0.001, max(0.0, arrivals[next_i] - now)))
-    wall = time.perf_counter() - t0
+    wall = eng.now()
     return reqs, wall
+
+
+def serve_trace(eng, args, arrivals, prompts, budgets, priorities, users):
+    """Open-loop driver against the *live* async server: one coroutine per
+    request sleeps until its Poisson arrival, submits to the running
+    :class:`AsyncServer`, and consumes its token stream.  Unlike
+    :func:`replay_trace` the step loop never sees the trace — admission
+    happens while it runs, exactly like a real front-end.  Arrivals are
+    stamped on the engine clock (single timebase; see ``eng.now()``)."""
+    from repro.serve.server import AsyncServer, collect
+
+    reqs = []
+
+    async def run():
+        eng.reset_clock()
+        async with AsyncServer(eng, stream_buffer=args.stream_buffer) as srv:
+            async def one(i):
+                delay = arrivals[i] - eng.now()
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                stream = await srv.submit(
+                    prompts[i], int(budgets[i]),
+                    arrival_time=float(arrivals[i]),
+                    priority=int(priorities[i]), user=users[i])
+                reqs.append(stream.request)
+                await collect(stream)
+
+            await asyncio.gather(*(one(i) for i in range(len(prompts))))
+            return eng.now()
+
+    wall = asyncio.run(run())
+    return reqs, wall
+
+
+def run_parity(cfg, params, args, rt):
+    """Closed-loop parity: the streamed path must be token-identical to
+    ``generate_all`` on an identically-configured engine, per policy.
+    Proves the async front-end (pending handoff, pump scheduling,
+    bounded-queue backpressure) never perturbs what the engine emits."""
+    from repro.serve.server import AsyncServer, collect
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(4, args.max_prompt + 1)).tolist()
+               for _ in range(args.requests)]
+    budgets = [int(rng.integers(max(1, args.max_new // 2),
+                                args.max_new + 1))
+               for _ in range(args.requests)]
+    spec_k = max(int(s) for s in args.spec_k.split(","))
+    policies = (["fifo", "sjf", "priority:preempt",
+                 f"fair:{max(1, args.max_new // 2)}"]
+                if args.policies == "all" else args.policies.split(","))
+
+    async def stream_all(eng):
+        async with AsyncServer(eng, stream_buffer=args.stream_buffer) as srv:
+            streams = [await srv.submit(p, b)
+                       for p, b in zip(prompts, budgets)]
+            return [list(o) for o in
+                    await asyncio.gather(*(collect(s) for s in streams))]
+
+    for pol in policies:
+        args.policy = pol
+        ref = make_engine(cfg, params, args, rt,
+                          spec_k=spec_k).generate_all(prompts, budgets)
+        eng = make_engine(cfg, params, args, rt, spec_k=spec_k)
+        got = asyncio.run(stream_all(eng))
+        assert got == ref, (pol, got, ref)
+        print(f"PARITY_OK {pol} chunk={args.chunk} spec_k={eng.spec_k} "
+              f"({sum(len(o) for o in got)} tokens)")
 
 
 def summarize(policy, eng, reqs, wall):
@@ -223,6 +306,17 @@ def main():
                          'k=0, e.g. "1,2,4" (1 = the per-token baseline)')
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
+    ap.add_argument("--serve", action="store_true",
+                    help="drive the live async server (open loop): per-"
+                         "request coroutines sleep to their Poisson arrival, "
+                         "submit to the running AsyncServer and consume the "
+                         "token stream; same summary fields")
+    ap.add_argument("--parity", action="store_true",
+                    help="closed-loop check instead of a benchmark: streamed "
+                         "output must be token-identical to generate_all per "
+                         "policy (honours --chunk/--spec-k), then exit")
+    ap.add_argument("--stream-buffer", type=int, default=16,
+                    help="per-stream token queue bound in --serve/--parity")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary record as JSON")
     args = ap.parse_args()
@@ -231,6 +325,10 @@ def main():
     cfg = registry.get(args.arch).reduced()
     params = M.init_params(jax.random.key(0), cfg)
     rt = make_serve_runtime(args.mesh)
+
+    if args.parity:
+        run_parity(cfg, params, args, rt)
+        return
 
     rng = np.random.default_rng(args.seed)
     arrivals, prompts, budgets, priorities, users = build_trace(
@@ -263,8 +361,12 @@ def main():
         for K, m in combos:
             eng = make_engine(cfg, params, args, rt, spec_k=K, multi_step=m)
             warm_engine(eng, args)
-            reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
-                                      priorities, users)
+            if args.serve:
+                reqs, wall = serve_trace(eng, args, arrivals, prompts,
+                                         budgets, priorities, users)
+            else:
+                reqs, wall = replay_trace(eng, arrivals, prompts, budgets,
+                                          priorities, users)
             recs.append(summarize(pol, eng, reqs, wall))
         # speedup baseline: the (k=0, m=1) record wherever it sits in the
         # sweep (None — JSON null — when there is no baseline or NaN TPOTs)
@@ -285,6 +387,7 @@ def main():
 
     if args.json:
         out = {"bench": "serve_throughput", "arch": cfg.name,
+               "mode": "serve-open-loop" if args.serve else "replay",
                "slots": args.slots, "requests": args.requests,
                "rate_req_s": args.rate, "mesh": args.mesh,
                "seed": args.seed, "chunk": args.chunk,

@@ -31,6 +31,14 @@ the pool is in pure decode steady state):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --continuous --multi-step 4
 
+Streaming front-end (the async serve loop: per-request token streams
+with bounded-queue backpressure, live admission and mid-decode
+cancellation — one request is cancelled after its first tokens to
+exercise the disconnect path):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --serve --requests 3 --slots 2
+
 Either mode accepts ``--mesh DxM`` to serve over a (data, model) device
 mesh (slot pool over data axes, experts/FFN over model; see
 ``dist/sharding.py``).  On a CPU box, force host devices first:
@@ -42,6 +50,7 @@ mesh (slot pool over data axes, experts/FFN over model; see
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -138,6 +147,64 @@ def _run_continuous(cfg, params, args):
     print("sample tokens:", reqs[0].output[:10])
 
 
+def _run_serve(cfg, params, args):
+    """Async streaming demo: submit ``--requests`` live, stream them
+    concurrently, cancel the second one after its first two tokens, and
+    shut down cleanly.  Doubles as the CI smoke for the serve loop."""
+    from repro.serve.server import AsyncServer
+
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.steps + 1
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
+                                   max_len=max_len,
+                                   rt=make_serve_runtime(args.mesh),
+                                   quantize=not args.no_quantize,
+                                   policy=args.policy, chunk=args.chunk,
+                                   max_step_tokens=args.max_step_tokens,
+                                   spec_k=args.spec_k, drafter=args.drafter,
+                                   multi_step=args.multi_step)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(4, args.prompt_len + 1)).tolist()
+               for _ in range(args.requests)]
+    budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
+               for _ in range(args.requests)]
+    cancel_at = 1 if args.requests > 1 else None   # disconnect this stream
+
+    async def consume(i, stream):
+        toks = []
+        async for tok in stream:
+            toks.append(tok)
+            if i == cancel_at and len(toks) >= 2:
+                stream.cancel()
+        return toks
+
+    async def demo():
+        t0 = eng.now()
+        async with AsyncServer(eng, stream_buffer=args.stream_buffer) as srv:
+            streams = [await srv.submit(p, m, temperature=args.temperature,
+                                        top_k=args.top_k)
+                       for p, m in zip(prompts, budgets)]
+            outs = await asyncio.gather(*(consume(i, s)
+                                          for i, s in enumerate(streams)))
+        return streams, outs, eng.now() - t0
+
+    streams, outs, wall = asyncio.run(demo())
+    gen = sum(len(o) for o in outs)
+    print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
+          f"policy={eng.policy.name} streamed")
+    for i, (s, o) in enumerate(zip(streams, outs)):
+        state = "cancelled" if s.cancelled else "finished"
+        print(f"  req {i}: {state} after {len(o)} tokens "
+              f"(budget {budgets[i]}) {o[:8]}")
+    print(f"streamed {gen} tokens in {wall:.2f}s -> {gen/wall:.1f} tok/s | "
+          f"steps={eng.stats['steps']} preemptions={eng.stats['preemptions']}")
+    assert all(s.request.done for s in streams)
+    assert not eng.scheduler.has_work() and not eng._carries
+    if cancel_at is not None:
+        assert streams[cancel_at].cancelled
+    print("SERVE_SHUTDOWN_CLEAN")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-125m")
@@ -148,6 +215,12 @@ def main():
     ap.add_argument("--no-quantize", action="store_true")
     ap.add_argument("--continuous", action="store_true",
                     help="serve a ragged request stream via the slot scheduler")
+    ap.add_argument("--serve", action="store_true",
+                    help="async streaming front-end demo: live admission, "
+                         "per-request token streams, one mid-stream cancel, "
+                         "clean shutdown")
+    ap.add_argument("--stream-buffer", type=int, default=16,
+                    help="per-stream token queue bound (backpressure)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", default="fifo",
@@ -181,7 +254,9 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = M.init_params(jax.random.key(0), cfg)
-    if args.continuous:
+    if args.serve:
+        _run_serve(cfg, params, args)
+    elif args.continuous:
         _run_continuous(cfg, params, args)
     else:
         _run_fixed(cfg, params, args)

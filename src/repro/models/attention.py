@@ -122,9 +122,13 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
 
 def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                 backend: str = "dense", lengths: jax.Array | None = None,
-                ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+                rt=None) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Training / prefill GQA.  Returns (out, (k, v)) for KV caching.
-    ``lengths`` ([B], optional) masks padding keys in ragged batches."""
+    ``lengths`` ([B], optional) masks padding keys in ragged batches.
+    Passing ``rt`` (a Runtime with a mesh) routes RoPE through the
+    partition-safe contraction form, like the chunked path — the serve
+    engine's atomic prefill does; the training path stays on the
+    single-device rotate-half form."""
     B, T, _ = x.shape
     hd = cfg.head_dim
     q = L.apply_linear(L._lin(p, "wq"), x, backend).reshape(B, T, cfg.n_heads, hd)
@@ -134,8 +138,8 @@ def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         q = L.apply_norm(p["q_norm"], q)
         k = L.apply_norm(p["k_norm"], k)
     if cfg.rope_theta:
-        q = L.apply_rope(q, positions, cfg.rope_theta)
-        k = L.apply_rope(k, positions, cfg.rope_theta)
+        q = _rope(q, positions, cfg.rope_theta, rt)
+        k = _rope(k, positions, cfg.rope_theta, rt)
     o = flash_attention(q, k, v, kv_lengths=lengths)
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
     return out, (k, v)
@@ -144,11 +148,12 @@ def gqa_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 # ---------------------------------------------------------------------------
 # chunked prefill: consume [B, C] tokens at an arbitrary cursor
 # ---------------------------------------------------------------------------
-def _rope_chunk(t: jax.Array, positions: jax.Array, theta: float, rt) -> jax.Array:
-    """RoPE for the chunked-prefill path: the partition-safe contraction
-    form under a mesh (rotate-half's split+concat mis-partitions deferred
-    partial sums — see :func:`layers.apply_rope_spmd`), the bit-exact
-    elementwise form on a single device."""
+def _rope(t: jax.Array, positions: jax.Array, theta: float, rt) -> jax.Array:
+    """RoPE for the prefill paths (atomic and chunked): the partition-safe
+    contraction form under a mesh (rotate-half's split+concat
+    mis-partitions deferred partial sums, triggering SPMD full-
+    rematerialization copies — see :func:`layers.apply_rope_spmd`), the
+    bit-exact elementwise form on a single device."""
     if rt is not None and rt.mesh is not None:
         return L.apply_rope_spmd(t, positions, theta)
     return L.apply_rope(t, positions, theta)
@@ -176,8 +181,8 @@ def gqa_chunk(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         q = L.apply_norm(p["q_norm"], q)
         k = L.apply_norm(p["k_norm"], k)
     if cfg.rope_theta:
-        q = _rope_chunk(q, positions, cfg.rope_theta, rt)
-        k = _rope_chunk(k, positions, cfg.rope_theta, rt)
+        q = _rope(q, positions, cfg.rope_theta, rt)
+        k = _rope(k, positions, cfg.rope_theta, rt)
     k_buf = KV.chunk_update(buf["k"], k, start)
     v_buf = KV.chunk_update(buf["v"], v, start)
     o = flash_attention(q, k_buf.astype(q.dtype), v_buf.astype(q.dtype),
@@ -199,12 +204,12 @@ def mla_chunk(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
     q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, C, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = _rope_chunk(q_rope, positions, cfg.rope_theta, rt)
+    q_rope = _rope(q_rope, positions, cfg.rope_theta, rt)
 
     kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
     c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
     c_kv = L.apply_norm(p["kv_norm"], c_kv)
-    k_rope = _rope_chunk(k_rope[:, :, None, :], positions, cfg.rope_theta, rt)
+    k_rope = _rope(k_rope[:, :, None, :], positions, cfg.rope_theta, rt)
     kv = L.apply_linear(L._lin(p, "wkv_b"), c_kv, backend).reshape(B, C, H, dn + dv)
     k_nope, v = kv[..., :dn], kv[..., dn:]
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, C, H, dr))], axis=-1)
@@ -214,7 +219,7 @@ def mla_chunk(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     v_buf = KV.chunk_update(buf["v"], v, start)
     # the latent's two halves are carried separately and concatenated at
     # finalize time: concatenating them here hits the same SPMD
-    # partial-sum mispartition as rotate-half (see _rope_chunk)
+    # partial-sum mispartition as rotate-half (see _rope)
     lat_c = KV.chunk_update(buf["lat_c"], c_kv, start)
     lat_r = KV.chunk_update(buf["lat_r"], k_rope[:, :, 0, :], start)
     o = flash_attention(qf, k_buf.astype(qf.dtype), v_buf.astype(qf.dtype),
@@ -393,21 +398,23 @@ def _quantize_latent(latent: jax.Array) -> tuple[jax.Array, jax.Array]:
                   -127, 127).astype(jnp.int8)
     return lq, sc
 def mla_forward(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-                backend: str = "dense", lengths: jax.Array | None = None):
+                backend: str = "dense", lengths: jax.Array | None = None,
+                rt=None):
     """Training/prefill MLA.  Returns (out, latent) where latent =
-    [B, T, kv_lora + rope] is what the SLC region caches."""
+    [B, T, kv_lora + rope] is what the SLC region caches.  ``rt`` routes
+    RoPE partition-safe under a mesh (see :func:`gqa_forward`)."""
     B, T, _ = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
     q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    q_rope = _rope(q_rope, positions, cfg.rope_theta, rt)
 
     kv_a = L.apply_linear(L._lin(p, "wkv_a"), x, backend)
     c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
     c_kv = L.apply_norm(p["kv_norm"], c_kv)
-    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,T,1,dr]
+    k_rope = _rope(k_rope[:, :, None, :], positions, cfg.rope_theta, rt)  # [B,T,1,dr]
     kv = L.apply_linear(L._lin(p, "wkv_b"), c_kv, backend).reshape(B, T, H, dn + dv)
     k_nope, v = kv[..., :dn], kv[..., dn:]
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)

@@ -615,8 +615,13 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
                                             backend=rt.backend,
                                             return_state=True)
                 elif cfg.attn_type == "mla":
+                    # rt threads through so prefill RoPE takes the
+                    # partition-safe form under a mesh (rotate-half's
+                    # split+concat triggers SPMD full rematerialisation
+                    # inside this layer scan)
                     mix, latent = A.mla_forward(pp["attn"], cfg, h, positions,
-                                                rt.backend, lengths=lengths)
+                                                rt.backend, lengths=lengths,
+                                                rt=rt)
                     amax = jnp.max(jnp.abs(latent), -1, keepdims=True)
                     sc = jnp.maximum(amax, 1e-8) / 127.0
                     lq = jnp.clip(jnp.round(latent / sc), -127, 127).astype(jnp.int8)
@@ -627,7 +632,8 @@ def prefill(p: Params, cfg: ModelConfig, inputs: jax.Array, max_len: int,
                               c["c_s"], sc.astype(jnp.float32), (0, 0, 0))}
                 else:
                     mix, (k, v) = A.gqa_forward(pp["attn"], cfg, h, positions,
-                                                rt.backend, lengths=lengths)
+                                                rt.backend, lengths=lengths,
+                                                rt=rt)
                     from repro.core.quant import quantize_kv
                     # land k/v on the cache's sharding *before* quantizing so
                     # the quantize+update pipeline doesn't bounce layouts

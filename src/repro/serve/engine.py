@@ -265,7 +265,11 @@ class ContinuousBatchingEngine:
         self._topk_fns: dict[int, Any] = {}       # k -> jitted lax.top_k
         self._io: dict[str, Any] | None = None    # mesh decode-I/O shardings
         self._next_rid = 0
-        self._t0 = time.perf_counter()
+        # cancellation inbox: `cancel()` only appends (GIL-atomic), so an
+        # async server may call it from another thread while `step()` runs;
+        # the step loop drains it at the next iteration boundary
+        self._cancels: list[Request] = []
+        self._t0 = time.monotonic()
         self.stats = {"steps": 0, "decode_steps": 0, "prefill_tokens": 0,
                       "chunks": 0, "max_step_prefill_tokens": 0,
                       "max_step_total_tokens": 0, "preemptions": 0,
@@ -399,12 +403,24 @@ class ContinuousBatchingEngine:
         return req
 
     def _now(self) -> float:
-        return time.perf_counter() - self._t0
+        return time.monotonic() - self._t0
+
+    def now(self) -> float:
+        """Engine timebase: seconds since construction / :meth:`reset_clock`.
+
+        Every request timestamp (``arrival_time`` default, ``admit_time``,
+        ``first_token_time``, ``finish_time``) is stamped from this clock,
+        and it is **monotonic** (``time.monotonic``): queue-delay/TTFT
+        deltas can never go negative under NTP/wall-clock skew.  Open-loop
+        drivers that inject ``arrival_time`` should stamp arrivals from
+        this same clock (or a fixed offset of it) so the timebase stays
+        single-sourced."""
+        return self._now()
 
     def reset_clock(self) -> None:
         """Re-zero the engine clock (e.g. after compile warm-up) so request
         timestamps share the caller's timebase."""
-        self._t0 = time.perf_counter()
+        self._t0 = time.monotonic()
 
     # -- host<->device transfer discipline --------------------------------
     # Every steady-state transfer goes through these two helpers: transfers
@@ -662,8 +678,39 @@ class ContinuousBatchingEngine:
         self._rngs.pop(req.rid, None)     # release the per-request sampler
 
     def _fail(self, req: Request, error: str) -> None:
+        if req.slot is not None:          # died mid-chunk: drop its carry
+            self._carries.pop(req.slot, None)
         self.scheduler.fail(req, self._now(), error=error)
         self._rngs.pop(req.rid, None)
+
+    # -- cancellation ------------------------------------------------------
+    def cancel(self, req: Request) -> None:
+        """Request cancellation (client disconnect): takes effect at the
+        next iteration boundary — the slot is freed mid-decode (or
+        mid-chunked-prefill / between spec windows), partial output is
+        kept, and the request ends CANCELLED.  Safe to call from another
+        thread while ``step()`` is running (append-only inbox)."""
+        self._cancels.append(req)
+
+    def _apply_cancels(self, now: float) -> bool:
+        """Drain the cancellation inbox.  Slot hygiene mirrors a failure:
+        the in-flight prefill carry and the per-request sampler are
+        dropped with the slot.  A cancelled DECODING resident's committed
+        cursor is already what ``_slot_pos`` mirrors (every overshooting
+        lane rewound before the step ended — the same rewind EOS overshoot
+        uses), so freeing the slot needs no device work: the row is dead
+        in place until the next admission overwrites it."""
+        did = False
+        while self._cancels:
+            req = self._cancels.pop(0)
+            if req.done:
+                continue                  # raced with retire/fail: no-op
+            if req.slot is not None:
+                self._carries.pop(req.slot, None)
+            self.scheduler.cancel(req, now)
+            self._rngs.pop(req.rid, None)
+            did = True
+        return did
 
     # -- one serving iteration --------------------------------------------
     def step(self) -> bool:
@@ -678,6 +725,7 @@ class ContinuousBatchingEngine:
         now = self._now()
         self.stats["steps"] += 1
         step_pf = 0
+        cancelled = self._apply_cancels(now)
         for slot, req in list(self.scheduler.active.items()):
             if (req.state is RequestState.DECODING
                     and req.replay_pos >= len(req.output)
@@ -728,7 +776,7 @@ class ContinuousBatchingEngine:
         self.stats["max_step_total_tokens"] = max(
             self.stats["max_step_total_tokens"], step_pf + len(dec))
         if not dec:
-            return step_pf > 0
+            return step_pf > 0 or cancelled
         self.stats["decode_steps"] += 1
         if self.spec_k:
             self._spec_decode(dec)
@@ -950,9 +998,22 @@ class ContinuousBatchingEngine:
 
     # -- drive to completion ----------------------------------------------
     def drain(self) -> None:
-        """Step until the queue and all slots are empty."""
+        """Step until the queue and all slots are empty.
+
+        Terminates — never spins — when the remaining requests can make no
+        progress: every terminal request (failed, cancelled, retired)
+        leaves the queue/slots, so ``has_work()`` goes false; as a
+        backstop, consecutive no-work iterations with work still pending
+        raise instead of looping forever."""
+        stalls = 0
         while self.scheduler.has_work():
-            self.step()
+            stalls = 0 if self.step() else stalls + 1
+            if stalls >= 8:
+                pending = ([r.rid for r in self.scheduler.queue]
+                           + [r.rid for r in self.scheduler.active.values()])
+                raise RuntimeError(
+                    f"drain() stalled: {stalls} consecutive iterations did "
+                    f"no work but requests {pending} are still pending")
 
     def generate_all(self, prompts: list[list[int]],
                      max_new_tokens: int | list[int],

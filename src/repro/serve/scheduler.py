@@ -32,6 +32,12 @@ The slot lifecycle mirrors the paper's SLC-region residency:
                       ^                  | preempt (slot freed,
                       +------------------+  output kept, requeued)
 
+Any non-terminal state can also exit via ``cancel`` (client disconnect:
+slot freed mid-flight, partial output kept, state CANCELLED) or ``fail``
+(admission/prefill raised: state FINISHED with ``error`` set).  Both
+remove a QUEUED request from the queue so a terminal request can never
+keep ``has_work()`` true.
+
 ``PREFILLING`` carries progress: ``Request.prefill_pos`` is the chunk cursor
 — a request may stay PREFILLING across several engine iterations while its
 prompt is consumed chunk by chunk under the per-iteration token budget.
@@ -53,6 +59,7 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"
     DECODING = "decoding"
     FINISHED = "finished"
+    CANCELLED = "cancelled"
 
 
 @dataclasses.dataclass
@@ -87,7 +94,11 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.state is RequestState.FINISHED
+        return self.state in (RequestState.FINISHED, RequestState.CANCELLED)
+
+    @property
+    def cancelled(self) -> bool:
+        return self.state is RequestState.CANCELLED
 
     @property
     def remaining_work(self) -> int:
@@ -365,17 +376,38 @@ class Scheduler:
         req.slot = None
         self.policy.on_finish(req, now)
 
+    def _release(self, req: Request) -> None:
+        """Detach a request from wherever it lives: a QUEUED request leaves
+        the queue (a terminal request stuck in ``self.queue`` would keep
+        ``has_work()`` true forever — ``drain()`` would spin); a resident's
+        slot goes back to the free heap (no leak)."""
+        if req in self.queue:
+            self.queue.remove(req)
+        if req.slot is not None and self.active.get(req.slot) is req:
+            del self.active[req.slot]
+            heapq.heappush(self.free_slots, req.slot)
+        req.slot = None
+
     def fail(self, req: Request, now: float = 0.0,
              error: str = "admission failed") -> None:
         """Abort a request whose admission/prefill raised: the slot goes
         back to the free heap (no leak) and the request finishes with
         ``error`` set instead of wedging the engine."""
-        if req.slot is not None and self.active.get(req.slot) is req:
-            del self.active[req.slot]
-            heapq.heappush(self.free_slots, req.slot)
-        req.slot = None
+        self._release(req)
         req.state = RequestState.FINISHED
         req.error = error
+        req.finish_time = now
+        self.policy.on_finish(req, now)
+
+    def cancel(self, req: Request, now: float = 0.0) -> None:
+        """Client-side cancellation/disconnect: the request ends CANCELLED
+        (its partial output kept, no ``error``) and, if resident, its slot
+        is freed mid-flight for the next queued request.  Idempotent on an
+        already-terminal request."""
+        if req.done:
+            return
+        self._release(req)
+        req.state = RequestState.CANCELLED
         req.finish_time = now
         self.policy.on_finish(req, now)
 
