@@ -92,13 +92,18 @@ def percentile(sorted_vals, q):
     return sorted_vals[i]
 
 
-def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1):
+def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1,
+                prefix_cache=None):
     max_len = args.max_prompt + args.max_new + 1
+    if prefix_cache is None:
+        prefix_cache = getattr(args, "prefix_cache", False)
     return ContinuousBatchingEngine(
         cfg, params, n_slots=args.slots, max_len=max_len, rt=rt,
         policy=args.policy, chunk=args.chunk,
         max_step_tokens=args.max_step_tokens,
-        spec_k=spec_k, drafter=args.drafter, multi_step=multi_step)
+        spec_k=spec_k, drafter=args.drafter, multi_step=multi_step,
+        prefix_cache=prefix_cache,
+        prefix_cache_rows=getattr(args, "prefix_rows", None))
 
 
 def warm_engine(eng, args):
@@ -117,6 +122,12 @@ def warm_engine(eng, args):
     # multi-step engines warm with >= m budget so the fused block (and its
     # overshoot rewind) compiles before the measured run
     eng.generate_all(warm, [max(2, eng.multi_step)] * len(warm))
+    if eng._pcache is not None:
+        # flush the warmup prompts' leaves: the measured run starts from
+        # an empty trie with every slot back on the free heap
+        eng._pcache.clear()
+        for k in eng._pcache.stats:
+            eng._pcache.stats[k] = 0
     for k in eng.stats:
         eng.stats[k] = 0
 
@@ -186,9 +197,21 @@ def run_parity(cfg, params, args, rt):
     from repro.serve.server import AsyncServer, collect
 
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            rng.integers(4, args.max_prompt + 1)).tolist()
-               for _ in range(args.requests)]
+    if getattr(args, "prefix_cache", False):
+        # shared-prefix prompts so the warm path has something to hit:
+        # the parity bar is warm-hit streams == a *cold* engine's
+        # generate_all, token for token
+        shared = rng.integers(0, cfg.vocab_size,
+                              max(2, args.max_prompt // 2)).tolist()
+        prompts = [shared + rng.integers(
+                       0, cfg.vocab_size,
+                       rng.integers(2, max(3, args.max_prompt
+                                           - len(shared) + 1))).tolist()
+                   for _ in range(args.requests)]
+    else:
+        prompts = [rng.integers(0, cfg.vocab_size,
+                                rng.integers(4, args.max_prompt + 1)).tolist()
+                   for _ in range(args.requests)]
     budgets = [int(rng.integers(max(1, args.max_new // 2),
                                 args.max_new + 1))
                for _ in range(args.requests)]
@@ -206,13 +229,25 @@ def run_parity(cfg, params, args, rt):
 
     for pol in policies:
         args.policy = pol
-        ref = make_engine(cfg, params, args, rt,
-                          spec_k=spec_k).generate_all(prompts, budgets)
+        # the reference is always a cache-LESS engine: with --prefix-cache
+        # the check below is literally "warm-hit streams == cold prefill"
+        ref = make_engine(cfg, params, args, rt, spec_k=spec_k,
+                          prefix_cache=False).generate_all(prompts, budgets)
         eng = make_engine(cfg, params, args, rt, spec_k=spec_k)
         got = asyncio.run(stream_all(eng))
         assert got == ref, (pol, got, ref)
+        extra = ""
+        if eng._pcache is not None:
+            # second pass over the now-populated trie: warm admissions
+            # must stream the exact tokens the cold reference produced
+            got2 = asyncio.run(stream_all(eng))
+            assert got2 == ref, (pol, "warm pass diverged", got2, ref)
+            hits = eng.stats["prefix_hits"]
+            assert hits > 0, (pol, "prefix cache never hit", eng._pcache.stats)
+            extra = (f" prefix_hits={hits} "
+                     f"saved={eng.stats['prefill_tokens_saved']}")
         print(f"PARITY_OK {pol} chunk={args.chunk} spec_k={eng.spec_k} "
-              f"({sum(len(o) for o in got)} tokens)")
+              f"({sum(len(o) for o in got)} tokens){extra}")
 
 
 def summarize(policy, eng, reqs, wall):
@@ -226,7 +261,7 @@ def summarize(policy, eng, reqs, wall):
     qdelay = sorted(r.admit_time - r.arrival_time for r in done)
     tpot = sorted((r.finish_time - r.first_token_time) / (len(r.output) - 1)
                   for r in done if len(r.output) > 1)
-    return {
+    rec = {
         "policy": policy,
         "failed": len(failed),
         "wall_s": wall, "generated_tokens": gen,
@@ -262,6 +297,18 @@ def summarize(policy, eng, reqs, wall):
         / max(1, eng.stats["decode_steps"]),
         "xfer_bytes_total": eng.stats["xfer_bytes"],
     }
+    if eng._pcache is not None:
+        # present only when the cache is on — absent, not null, when off,
+        # so downstream record schemas stay backward-compatible
+        rec.update({
+            "prefix_hits": eng.stats["prefix_hits"],
+            "prefill_tokens_saved": eng.stats["prefill_tokens_saved"],
+            "prefix_cached_rows": eng.stats["cached_tokens"],
+            "prefix_aliases": eng._pcache.stats["aliases"],
+            "prefix_evictions": eng._pcache.stats["evictions"]
+            + eng._pcache.stats["reclaims"],
+        })
+    return rec
 
 
 COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("multi_step", "%5d"),
@@ -276,6 +323,9 @@ COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("multi_step", "%5d"),
 HEAD = ("policy            spec_k  mstep     tok/s  ttft-p50  ttft-p99  "
         "tpot-p50  tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  "
         "max_pf/step   host_ms   dev_ms  xfer_B   accept  speedup")
+# appended only when --prefix-cache is on (fields are absent otherwise)
+PREFIX_COLS = [("prefix_hits", "%6d"), ("prefill_tokens_saved", "%8d")]
+PREFIX_HEAD = "  pfhits   pfsaved"
 
 
 def main():
@@ -304,6 +354,14 @@ def main():
     ap.add_argument("--multi-step", default="1", metavar="M[,M...]",
                     help="fused multi-step decode block sizes to sweep at "
                          'k=0, e.g. "1,2,4" (1 = the per-token baseline)')
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache (needs --chunk): adds "
+                         "prefix_hits / prefill_tokens_saved to the table "
+                         "and JSON; under --parity the streamed engine runs "
+                         "a second warm pass that must match the cold "
+                         "reference token for token")
+    ap.add_argument("--prefix-rows", type=int, default=None,
+                    help="prefix-cache row budget (default slots * max_len)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help='serve over a (data, model) mesh, e.g. "2x4"')
     ap.add_argument("--serve", action="store_true",
@@ -353,7 +411,8 @@ def main():
     for m in multi_ms:
         if (0, m) not in combos:
             combos.append((0, m))
-    print(HEAD)
+    cols = COLS + (PREFIX_COLS if args.prefix_cache else [])
+    print(HEAD + (PREFIX_HEAD if args.prefix_cache else ""))
     records = {}
     for pol in policies:
         args.policy = pol
@@ -383,7 +442,7 @@ def main():
             key = pol if (K == 0 and m == 1) else \
                 (f"{pol}@spec{K}" if K else f"{pol}@m{m}")
             records[key] = rec
-            print("  ".join(_cell(fmt, rec[k]) for k, fmt in COLS))
+            print("  ".join(_cell(fmt, rec[k]) for k, fmt in cols))
 
     if args.json:
         out = {"bench": "serve_throughput", "arch": cfg.name,
@@ -394,6 +453,7 @@ def main():
                "max_step_tokens": args.max_step_tokens,
                "spec_k": spec_ks, "drafter": args.drafter,
                "multi_step": multi_ms,
+               "prefix_cache": args.prefix_cache,
                "policies": records}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

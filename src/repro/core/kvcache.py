@@ -169,6 +169,76 @@ def free_slot(cache, slot: jax.Array | int):
     return dataclasses.replace(cache, lengths=cache.lengths.at[slot].set(0))
 
 
+def copy_prefix(cache: KVCache, src: jax.Array | int, dst: jax.Array | int,
+                n: jax.Array | int) -> KVCache:
+    """Row-range copy between slots: ``dst``'s first ``n`` sequence rows
+    become ``src``'s (int8 payload + scales), and ``dst``'s length becomes
+    ``n`` — the prefix-cache admission gather.  Rows at or past ``n`` in
+    ``dst`` are left as the dead in-place entries they already were (the
+    attention mask hides them; the next append overwrites them).
+
+    ``src``/``dst``/``n`` may all be traced scalars, so one compiled gather
+    serves every (source leaf, destination slot, match length) triple.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+
+    def one(buf: jax.Array) -> jax.Array:
+        # buf: [L, B, S, ...] — slot axis 1, sequence axis 2
+        row = jax.lax.dynamic_index_in_dim(buf, src, axis=1, keepdims=True)
+        old = jax.lax.dynamic_index_in_dim(buf, dst, axis=1, keepdims=True)
+        keep = (jnp.arange(buf.shape[2]) < n).reshape(
+            (1, 1, buf.shape[2]) + (1,) * (buf.ndim - 3))
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, jnp.where(keep, row, old), dst, axis=1)
+
+    return dataclasses.replace(
+        cache,
+        k_q=one(cache.k_q), k_s=one(cache.k_s),
+        v_q=one(cache.v_q), v_s=one(cache.v_s),
+        lengths=cache.lengths.at[dst].set(n))
+
+
+class SlotLedger:
+    """Host-side refcounts over pool slots for the prefix cache.
+
+    A slot row in the SLC pool can be held by a trie leaf (the cached
+    prefix claims rows ``[0:n)``) and, while a request aliases that leaf,
+    by an active writer — one hold each, counted here.  The slot returns
+    to the scheduler's free heap exactly when its count drops to zero;
+    releasing a hold that was never taken raises (the double-free guard:
+    a slot freed twice would be handed to two residents at once and the
+    second admission would silently corrupt the first's KV rows).
+    """
+
+    def __init__(self) -> None:
+        self._counts: dict[int, int] = {}
+
+    def count(self, slot: int) -> int:
+        return self._counts.get(slot, 0)
+
+    def incref(self, slot: int) -> int:
+        c = self._counts.get(slot, 0) + 1
+        self._counts[slot] = c
+        return c
+
+    def decref(self, slot: int) -> int:
+        c = self._counts.get(slot, 0)
+        if c <= 0:
+            raise RuntimeError(
+                f"slot {slot}: release without a matching hold (double free)")
+        c -= 1
+        if c:
+            self._counts[slot] = c
+        else:
+            del self._counts[slot]
+        return c
+
+    def held(self) -> set[int]:
+        return set(self._counts)
+
+
 def layer_view(cache: KVCache, layer: int) -> tuple[jax.Array, ...]:
     return (cache.k_q[layer], cache.k_s[layer],
             cache.v_q[layer], cache.v_s[layer])

@@ -351,6 +351,25 @@ def verify_shardings(n_slots: int, mesh) -> dict:
     }
 
 
+def prefix_gather_shardings(mesh) -> dict:
+    """Prefix-cache admission I/O, pinned beside the pool: the row gather
+    (``transformer.copy_slot_prefix``) and the warm-carry dequant take the
+    pool at ``decode_state_shardings`` in *and* out — the donation-alias
+    condition, and what keeps a warm admission from migrating slot rows so
+    meshed serve stays token-identical to single-device — while the scalar
+    operands (source/destination slot ids, matched row count) replicate:
+
+    * ``slot`` — src/dst slot ids (host scalars, feed dynamic slicing);
+    * ``rows`` — the matched prefix length (masks the copied rows).
+
+    The source and destination rows may live on different data-axis shards
+    (the slot axis is data-sharded); XLA lowers the cross-shard row move
+    inside the jitted gather, so no host round-trip ever touches the rows.
+    """
+    r = replicated(mesh)
+    return {"slot": r, "rows": r}
+
+
 def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
                            state_abs: Any, mesh):
     """Slot-pool decode state: the batch/slot axis (dim 1 of every cache

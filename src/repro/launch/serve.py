@@ -98,6 +98,34 @@ def _run_fixed(cfg, params, args):
     print("sample tokens:", toks[0, :10].tolist())
 
 
+def _make_prompts(cfg, args, rng):
+    """Ragged random prompts; with ``--prefix-cache`` they share a system
+    prefix (half the prompt budget) so the warm path has something to hit."""
+    if not args.prefix_cache:
+        return [rng.integers(0, cfg.vocab_size,
+                             rng.integers(4, args.prompt_len + 1)).tolist()
+                for _ in range(args.requests)]
+    shared = rng.integers(0, cfg.vocab_size,
+                          max(2, args.prompt_len // 2)).tolist()
+    return [shared + rng.integers(
+                0, cfg.vocab_size,
+                rng.integers(2, max(3, args.prompt_len - len(shared) + 1))
+            ).tolist()
+            for _ in range(args.requests)]
+
+
+def _print_prefix_stats(eng):
+    if eng._pcache is None:
+        return
+    print(f"prefix cache: hits={eng.stats['prefix_hits']} "
+          f"saved={eng.stats['prefill_tokens_saved']} tokens "
+          f"cached_rows={eng.stats['cached_tokens']} "
+          f"leaves={eng._pcache.n_leaves} "
+          f"aliases={eng._pcache.stats['aliases']} "
+          f"evictions={eng._pcache.stats['evictions']} "
+          f"reclaims={eng._pcache.stats['reclaims']}")
+
+
 def _run_continuous(cfg, params, args):
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 1
@@ -108,10 +136,10 @@ def _run_continuous(cfg, params, args):
                                    policy=args.policy, chunk=args.chunk,
                                    max_step_tokens=args.max_step_tokens,
                                    spec_k=args.spec_k, drafter=args.drafter,
-                                   multi_step=args.multi_step)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            rng.integers(4, args.prompt_len + 1)).tolist()
-               for _ in range(args.requests)]
+                                   multi_step=args.multi_step,
+                                   prefix_cache=args.prefix_cache,
+                                   prefix_cache_rows=args.prefix_rows)
+    prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
     t0 = time.perf_counter()
@@ -140,6 +168,7 @@ def _run_continuous(cfg, params, args):
         print(f"multi-step: m={eng.multi_step} "
               f"blocks={eng.stats['multi_blocks']} "
               f"fused_tokens={eng.stats['multi_tokens']}")
+    _print_prefix_stats(eng)
     steps = max(1, eng.stats["steps"])
     print(f"host {1e3 * (eng.stats['step_s'] - eng.stats['device_s']) / steps:.2f} ms/step  "
           f"device {1e3 * eng.stats['device_s'] / steps:.2f} ms/step  "
@@ -162,13 +191,15 @@ def _run_serve(cfg, params, args):
                                    policy=args.policy, chunk=args.chunk,
                                    max_step_tokens=args.max_step_tokens,
                                    spec_k=args.spec_k, drafter=args.drafter,
-                                   multi_step=args.multi_step)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            rng.integers(4, args.prompt_len + 1)).tolist()
-               for _ in range(args.requests)]
+                                   multi_step=args.multi_step,
+                                   prefix_cache=args.prefix_cache,
+                                   prefix_cache_rows=args.prefix_rows)
+    prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
     cancel_at = 1 if args.requests > 1 else None   # disconnect this stream
+    # the cancelled stream exercises the prefix-cache refcount path too: a
+    # cancelled alias writer must decref (never leak or double-free its slot)
 
     async def consume(i, stream):
         toks = []
@@ -198,6 +229,7 @@ def _run_serve(cfg, params, args):
               f"(budget {budgets[i]}) {o[:8]}")
     print(f"streamed {gen} tokens in {wall:.2f}s -> {gen/wall:.1f} tok/s | "
           f"steps={eng.stats['steps']} preemptions={eng.stats['preemptions']}")
+    _print_prefix_stats(eng)
     assert all(s.request.done for s in streams)
     assert not eng.scheduler.has_work() and not eng._carries
     if cancel_at is not None:
@@ -239,6 +271,14 @@ def main():
     ap.add_argument("--drafter", default="ngram",
                     help='draft proposer: ngram[:N] (prompt lookup) | mtp '
                          '(multi-token-prediction head, cfg.mtp archs)')
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: retired requests publish their "
+                         "committed KV rows; later admissions sharing a "
+                         "prompt prefix start chunked prefill at the cached "
+                         "cursor (needs --chunk)")
+    ap.add_argument("--prefix-rows", type=int, default=None,
+                    help="prefix-cache row budget (LRU eviction above it); "
+                         "default slots * max_len")
     ap.add_argument("--multi-step", type=int, default=1, metavar="M",
                     help="fused multi-step decode: run M greedy iterations "
                          "per jitted call (argmax fed back on device) when "

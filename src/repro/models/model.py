@@ -106,6 +106,15 @@ def init_prefill_carry(cfg: ModelConfig, buf_len: int):
     return T.init_prefill_carry(cfg, buf_len)
 
 
+def warm_prefill_carry(cfg: ModelConfig, state: dict, slot, n, buf_len: int):
+    """Prefix-cache warm start: seed a chunked-prefill carry from the first
+    ``n`` cached rows of pool ``slot`` (see transformer.warm_prefill_carry).
+    GQA attention decoders only."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill targets decoder-only LMs")
+    return T.warm_prefill_carry(cfg, state, slot, n, buf_len)
+
+
 def prefill_chunk(params, cfg: ModelConfig, carry: dict, tokens, n_real,
                   rt: Runtime):
     """Consume ``tokens`` ([1, C], ``n_real`` of them real) at the carry's

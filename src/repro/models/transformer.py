@@ -327,6 +327,89 @@ def write_slot(state: dict, slot: jax.Array, one: dict) -> dict:
     return {"groups": new_groups, "pos": pos}
 
 
+def copy_slot_prefix(state: dict, src: jax.Array, dst: jax.Array,
+                     n: jax.Array) -> dict:
+    """Prefix-cache row gather: ``dst``'s first ``n`` sequence rows of every
+    cache leaf become ``src``'s (int8 payload + scales copied verbatim, so
+    the reused prefix is bit-identical to the cached one), and ``pos[dst]``
+    becomes ``n`` — the slot now holds exactly the cached prefix.  Rows at
+    or past ``n`` keep ``dst``'s dead in-place entries (masked, then
+    overwritten by the resumed chunked prefill's finalize).
+
+    GQA pools only: every leaf is ``[n_p, B, S, H, D]``-shaped with the
+    slot axis at 1 and the sequence axis at 2 (the layout
+    :func:`init_decode_state` builds for attention stacks).  ``src``,
+    ``dst`` and ``n`` are traced, so one compile serves every admission.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+
+    def one(leaf: jax.Array) -> jax.Array:
+        row = jax.lax.dynamic_index_in_dim(leaf, src, axis=1, keepdims=True)
+        old = jax.lax.dynamic_index_in_dim(leaf, dst, axis=1, keepdims=True)
+        keep = (jnp.arange(leaf.shape[2]) < n).reshape(
+            (1, 1, leaf.shape[2]) + (1,) * (leaf.ndim - 3))
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, jnp.where(keep, row, old), dst, axis=1)
+
+    groups = jax.tree.map(one, state["groups"])
+    pos = jnp.asarray(state["pos"], jnp.int32).at[dst].set(n)
+    return {"groups": groups, "pos": pos}
+
+
+def warm_prefill_carry(cfg: ModelConfig, state: dict, slot: jax.Array,
+                       n: jax.Array, buf_len: int) -> dict:
+    """Chunked-prefill carry seeded from rows ``[0:n)`` of pool ``slot`` —
+    the prefix-cache warm start.  The cached int8 rows dequantize into the
+    float K/V carry at the same positions, the cursor starts at ``n``, and
+    chunked prefill resumes mid-prompt exactly as if the first ``n`` tokens
+    had just been consumed.
+
+    Because :func:`repro.core.quant.quantize_kv` round-trips exactly
+    (dequantize -> requantize reproduces the int8 payload; the max element
+    of every (token, head) row quantizes to +/-127), the finalize that
+    rewrites the whole slot row at the end of the resumed prefill lands
+    byte-identical int8 on the cached prefix — aliased leaves survive their
+    writer's finalize untouched.
+
+    GQA attention stacks only: the MLA pool caches the compressed latent
+    (reconstructing the carry's per-head K/V needs per-layer weights) and
+    SSM state cannot restart mid-prompt — the serve engine silently
+    disables the prefix cache for both, mirroring ``chunk``/``spec_k``.
+    """
+    if cfg.attn_type == "mla":
+        raise NotImplementedError(
+            "prefix-cache warm start needs per-head K/V in the pool; the "
+            "MLA latent cache cannot seed the float carry without weights")
+    n = jnp.asarray(n, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    groups = []
+    for bufs in state["groups"]:
+        slots = []
+        for b in bufs:
+            if "k_q" not in b:
+                raise NotImplementedError(
+                    "prefix-cache warm start targets GQA attention pools")
+            n_p, _, S, H, D = b["k_q"].shape
+            w = min(S, buf_len)
+            keep = (jnp.arange(w) < n).reshape(1, 1, w, 1, 1)
+
+            def dequant(q, s):
+                row_q = jax.lax.dynamic_index_in_dim(q, slot, 1, keepdims=True)
+                row_s = jax.lax.dynamic_index_in_dim(s, slot, 1, keepdims=True)
+                row = row_q.astype(jnp.float32) * row_s
+                buf = jnp.zeros((n_p, 1, buf_len, H, D), jnp.float32)
+                return buf.at[:, :, :w].set(
+                    jnp.where(keep, row[:, :, :w], 0.0))
+
+            slots.append({"k": dequant(b["k_q"], b["k_s"]),
+                          "v": dequant(b["v_q"], b["v_s"])})
+        groups.append(tuple(slots))
+    return {"groups": tuple(groups),
+            "pos": jnp.broadcast_to(n, (1,)).astype(jnp.int32)}
+
+
 def apply_layer_decode(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
                        rt: Runtime):
     kind = cfg.layer_kind(slot)

@@ -212,7 +212,9 @@ class ContinuousBatchingEngine:
                  spec_k: int = 0,
                  drafter: str | Drafter | None = "ngram",
                  multi_step: int = 1,
-                 topk_preselect: bool = True):
+                 topk_preselect: bool = True,
+                 prefix_cache: bool = False,
+                 prefix_cache_rows: int | None = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -253,6 +255,22 @@ class ContinuousBatchingEngine:
             self.max_step_tokens = max_step_tokens
         self.scheduler = Scheduler(n_slots, max_len, policy)
         self.policy = self.scheduler.policy
+        # prefix cache: radix-indexed KV reuse over the slot pool.  GQA
+        # attention stacks only — the MLA pool caches the compressed
+        # latent (no per-head K/V to seed the warm carry from) and SSM
+        # state cannot restart mid-prompt — both silently fall back to
+        # cold prefill, mirroring the `chunk`/`spec_k` discipline.
+        self._pcache = None
+        if prefix_cache and not self._has_ssm and cfg.attn_type != "mla":
+            if self.chunk is None:
+                raise ValueError(
+                    "prefix_cache needs chunked prefill (chunk=c): warm "
+                    "admissions resume the chunked cursor mid-prompt")
+            from repro.serve.prefix_cache import RadixPrefixCache
+            budget = (prefix_cache_rows if prefix_cache_rows
+                      else n_slots * max_len)
+            self._pcache = RadixPrefixCache(budget)
+            self.scheduler.attach_prefix_cache(self._pcache)
         # the pool keeps headroom rows past max_len so neither a verify
         # window nor a fused multi-step block starting at the last live
         # position ever clamp-wraps its in-place appends onto valid rows
@@ -277,6 +295,11 @@ class ContinuousBatchingEngine:
                       "spec_accepted": 0, "multi_blocks": 0,
                       "multi_tokens": 0, "xfer_bytes": 0,
                       "decode_xfer_bytes": 0, "device_s": 0.0, "step_s": 0.0}
+        if self._pcache is not None:
+            # keys exist only when the cache is on so downstream record
+            # schemas stay backward-compatible (absent, not null, when off)
+            self.stats.update({"prefix_hits": 0, "cached_tokens": 0,
+                               "prefill_tokens_saved": 0})
 
         # every serve-path step donates its decode-state / carry argument:
         # the [layers, n_slots, S, H, D] int8 K/V pool (and the chunked
@@ -297,6 +320,16 @@ class ContinuousBatchingEngine:
                 lambda s, slot, c: T.write_slot(
                     s, slot, M.finalize_prefill_carry(cfg, c, max_len)),
                 donate_argnums=(0,))
+        if self._pcache is not None:
+            # warm admission pair: the row gather copies the matched leaf's
+            # rows into the new slot (donated pool, in-place), and the warm
+            # carry dequantizes those rows into the float chunk carry so
+            # prefill resumes at the cached cursor.  The carry read is NOT
+            # donated — the pool stays live for the step's other slots.
+            self._gather = jax.jit(T.copy_slot_prefix, donate_argnums=(0,))
+            self._warm_carry = jax.jit(
+                lambda s, slot, n: M.warm_prefill_carry(
+                    cfg, s, slot, n, max_len + self.chunk))
         if self.spec_k:
             self._drafter = make_drafter(drafter, cfg, self.rt, self.spec_k)
             self._h_last = (np.zeros((n_slots, cfg.d_model), np.float32)
@@ -380,6 +413,21 @@ class ContinuousBatchingEngine:
                 lambda s, slot, c: T.write_slot(
                     s, slot, M.finalize_prefill_carry(cfg, c, self.max_len)),
                 out_shardings=ssh, donate_argnums=(0,))
+        if self._pcache is not None:
+            # the gather is pinned beside the pool: in/out = the pool's
+            # shardings (the donation-alias condition) with replicated
+            # scalar operands, so a warm admission never migrates a slot
+            # row and meshed serve stays token-identical to single-device
+            gsh = SH.prefix_gather_shardings(mesh)
+            self._gather = jax.jit(
+                T.copy_slot_prefix,
+                in_shardings=(ssh, gsh["slot"], gsh["slot"], gsh["rows"]),
+                out_shardings=ssh, donate_argnums=(0,))
+            self._warm_carry = jax.jit(
+                lambda s, slot, n: M.warm_prefill_carry(
+                    cfg, s, slot, n, self.max_len + self.chunk),
+                in_shardings=(ssh, gsh["slot"], gsh["rows"]),
+                out_shardings=csh)
 
     # -- request intake ---------------------------------------------------
     def submit(self, prompt: Iterable[int], max_new_tokens: int,
@@ -626,6 +674,46 @@ class ContinuousBatchingEngine:
         self._emit_first(req, logits)
         return plen
 
+    def _admit_chunked(self, req: Request) -> None:
+        """Chunked admission: allocate the request's float carry — cold
+        (zeros, cursor 0) or, on a prefix-cache hit, warm.
+
+        A warm admission walks the trie for the longest cached prefix of
+        the prompt (capped at ``prompt_len - 1`` so at least one suffix
+        token always runs through chunked prefill and emits the first
+        token), gathers the matched rows into the request's slot (skipped
+        when the scheduler aliased the admission onto the cached leaf's
+        own slot — ``leaf_for`` resolves it), dequantizes them into the
+        carry, and starts the cursor at the match — ``prefill_pos`` moves
+        past the cached tokens without ever running them."""
+        if self._pcache is None:
+            self._carries[req.slot] = self._dev(self._carry_init)
+            return
+        src = n_hit = None
+        leaf = self._pcache.leaf_for(req.slot)
+        if leaf is not None:                  # aliased: rows already here
+            src, n_hit = req.slot, leaf.n_rows
+        elif req.adopted_rows >= 1:           # reclaim adopted the match's
+            src, n_hit = req.slot, req.adopted_rows   # slot: rows in place
+        else:
+            hit, n = self._pcache.lookup(req.prompt, req.prompt_len - 1)
+            if hit is not None and n >= 1:
+                src, n_hit = hit.slot, n
+        if src is None:
+            self._carries[req.slot] = self._dev(self._carry_init)
+            return
+        if src != req.slot:
+            self.state = self._dev(self._gather, self.state,
+                                   jnp.int32(src), jnp.int32(req.slot),
+                                   jnp.int32(n_hit))
+        self._carries[req.slot] = self._dev(
+            self._warm_carry, self.state, jnp.int32(req.slot),
+            jnp.int32(n_hit))
+        req.prefill_pos = n_hit
+        self.stats["prefix_hits"] += 1
+        self.stats["prefill_tokens_saved"] += n_hit
+        self.stats["cached_tokens"] = self._pcache.cached_rows
+
     def _run_chunk(self, req: Request, n: int) -> int:
         """Advance one PREFILLING slot by ``n`` prompt tokens (one [1, chunk]
         call; the tail beyond ``n`` is padding).  Finalizes into the pool on
@@ -674,7 +762,16 @@ class ContinuousBatchingEngine:
         self.stats["preemptions"] += 1
 
     def _retire(self, req: Request, now: float) -> None:
-        self.scheduler.retire(req, now)
+        publish = None
+        if self._pcache is not None and req.slot is not None:
+            # committed rows = the host cursor mirror (prompt + every fed
+            # generated token), capped at max_len - 1 so a claimed row can
+            # never collide with a clamped garbage append on an inactive
+            # slot (appends clamp to >= state_len - T >= max_len - 1)
+            publish = min(int(self._slot_pos[req.slot]), self.max_len - 1)
+        self.scheduler.retire(req, now, publish_rows=publish)
+        if self._pcache is not None:
+            self.stats["cached_tokens"] = self._pcache.cached_rows
         self._rngs.pop(req.rid, None)     # release the per-request sampler
 
     def _fail(self, req: Request, error: str) -> None:
@@ -731,8 +828,11 @@ class ContinuousBatchingEngine:
                     and req.replay_pos >= len(req.output)
                     and req.should_stop()):
                 self._retire(req, now)
-        # preemption: only meaningful when the queue is blocked on slots
-        if not self.scheduler.free_slots:
+        # preemption: only meaningful when the queue is blocked on slots —
+        # and a reclaimable prefix-cache leaf means it is not blocked
+        # (admission evicts LRU cache rows before any resident is bumped)
+        if not self.scheduler.free_slots and not (
+                self._pcache is not None and self._pcache.has_reclaimable()):
             for req in self.scheduler.preemption_victims(now):
                 self._preempt(req, now)
         for req in self.scheduler.admit(now):
@@ -740,9 +840,10 @@ class ContinuousBatchingEngine:
                 # exception-safe like _admit_atomic: a failed carry
                 # allocation fails one request, never leaks the slot
                 try:
-                    self._carries[req.slot] = self._dev(self._carry_init)
+                    self._admit_chunked(req)
                 except Exception as e:                # noqa: BLE001
                     self._fail(req, f"{type(e).__name__}: {e}")
+                    self._check_pool_alive(e)
             else:
                 step_pf += self._admit_atomic(req)
         if self.chunk:

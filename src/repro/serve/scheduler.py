@@ -82,6 +82,8 @@ class Request:
     output: list[int] = dataclasses.field(default_factory=list)
     prefill_pos: int = 0                  # chunked-prefill cursor (tokens done)
     replay_pos: int = 0                   # tokens re-fed after a preemption
+    adopted_rows: int = 0                 # prefix rows already in own slot
+    #   (reclaim adopted the matching leaf's slot — see RadixPrefixCache)
     n_preemptions: int = 0
     error: Optional[str] = None           # set when admission/prefill failed
     admit_time: Optional[float] = None
@@ -311,6 +313,29 @@ class Scheduler:
         self.free_slots: list[int] = list(range(n_slots))   # min-heap
         heapq.heapify(self.free_slots)
         self.active: dict[int, Request] = {}                # slot -> request
+        self.prefix_cache = None                 # set via attach_prefix_cache
+
+    # -- prefix cache ------------------------------------------------------
+    def attach_prefix_cache(self, cache) -> None:
+        """Wire a :class:`repro.serve.prefix_cache.RadixPrefixCache` into
+        the slot lifecycle: retirement publishes committed prefixes,
+        admission may alias a cached leaf's slot or reclaim the LRU leaf
+        when the free heap runs dry, and every slot free routes through
+        the cache's refcounts (an aliased leaf's slot must decref its
+        writer hold, never leak onto the free heap while the leaf still
+        claims its rows)."""
+        self.prefix_cache = cache
+        cache._free = lambda slot: heapq.heappush(self.free_slots, slot)
+
+    def _free_slot(self, slot: int) -> None:
+        """Refcount-aware slot free: an alias-held slot drops its writer
+        hold (the cached leaf keeps the slot); anything else goes back on
+        the free heap."""
+        cache = self.prefix_cache
+        if cache is not None and cache.manages(slot):
+            cache.release_writer(slot)
+        else:
+            heapq.heappush(self.free_slots, slot)
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -334,11 +359,34 @@ class Scheduler:
         """Move queued requests into free slots in policy order until slots
         run out.  Returns the newly admitted requests (slot assigned,
         PREFILLING, ``prefill_pos`` reset)."""
+        cache = self.prefix_cache
         admitted = []
-        while self.queue and self.free_slots:
+        while self.queue and (
+                self.free_slots
+                or (cache is not None and cache.has_reclaimable())):
             req = self.policy.select(self.queue, now)
             self.queue.remove(req)
-            slot = heapq.heappop(self.free_slots)
+            slot = None
+            req.adopted_rows = 0
+            if cache is not None:
+                # zero-copy admission: decode in place on a fully-matched
+                # cached leaf (writer hold taken; engine resolves the
+                # match through leaf_for(slot))
+                slot = cache.alias_slot(req.prompt, req.prompt_len - 1)
+            if slot is None:
+                if self.free_slots:
+                    slot = heapq.heappop(self.free_slots)
+                else:
+                    # slot pressure: LRU cache rows yield to live work
+                    # (evict-before-preempt — see engine preemption gate);
+                    # the request's own best-match leaf is spared, or its
+                    # slot adopted outright when it is the only candidate
+                    slot, req.adopted_rows = cache.reclaim_slot(
+                        protect_tokens=req.prompt,
+                        max_rows=req.prompt_len - 1)
+            if slot is None:                     # pragma: no cover - guard
+                self.queue.append(req)
+                break
             req.slot = slot
             req.state = RequestState.PREFILLING
             req.prefill_pos = 0
@@ -358,7 +406,7 @@ class Scheduler:
         output is kept (the engine replays it on re-admission)."""
         assert req.slot is not None and self.active.get(req.slot) is req
         del self.active[req.slot]
-        heapq.heappush(self.free_slots, req.slot)
+        self._free_slot(req.slot)
         req.slot = None
         req.state = RequestState.QUEUED
         req.prefill_pos = 0
@@ -366,11 +414,24 @@ class Scheduler:
         self.queue.append(req)
 
     # -- retirement -------------------------------------------------------
-    def retire(self, req: Request, now: float = 0.0) -> None:
-        """Finish a request and free its slot for backfill."""
+    def retire(self, req: Request, now: float = 0.0,
+               publish_rows: int | None = None) -> None:
+        """Finish a request and free its slot for backfill.
+
+        With a prefix cache attached, ``publish_rows`` (the engine's
+        committed row count for the slot) publishes the request's token
+        prefix into the trie: on success the cache takes the slot (leaf
+        claim — no free-heap push); on rejection (covered / over budget)
+        the slot frees through the refcount-aware path like any other."""
         assert req.slot is not None and self.active.get(req.slot) is req
-        del self.active[req.slot]
-        heapq.heappush(self.free_slots, req.slot)
+        slot = req.slot
+        del self.active[slot]
+        took = False
+        if self.prefix_cache is not None and publish_rows:
+            seq = (req.prompt + req.output)[:publish_rows]
+            took = self.prefix_cache.publish(seq, slot, publish_rows)
+        if not took:
+            self._free_slot(slot)
         req.state = RequestState.FINISHED
         req.finish_time = now
         req.slot = None
@@ -385,7 +446,7 @@ class Scheduler:
             self.queue.remove(req)
         if req.slot is not None and self.active.get(req.slot) is req:
             del self.active[req.slot]
-            heapq.heappush(self.free_slots, req.slot)
+            self._free_slot(req.slot)
         req.slot = None
 
     def fail(self, req: Request, now: float = 0.0,
@@ -403,7 +464,9 @@ class Scheduler:
         """Client-side cancellation/disconnect: the request ends CANCELLED
         (its partial output kept, no ``error``) and, if resident, its slot
         is freed mid-flight for the next queued request.  Idempotent on an
-        already-terminal request."""
+        already-terminal request.  A cancelled alias writer decrefs its
+        writer hold through ``_free_slot`` — the cached leaf keeps the
+        slot, so cancellation can neither leak it nor double-free it."""
         if req.done:
             return
         self._release(req)

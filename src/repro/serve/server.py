@@ -22,7 +22,12 @@ This is the layer that turns the engine from a batch replayer
   windows (the committed cursor is exactly what the overshoot rewind
   already left; the dead rows are overwritten in place by the next
   admission).  The request ends ``CANCELLED`` with its partial output
-  kept.
+  kept.  With the radix prefix cache on, a cancelled request that was
+  admitted onto a cached leaf's slot (zero-copy alias) releases exactly
+  its *writer* hold — the leaf keeps its claim and the slot never lands
+  on the free heap while cached rows live there, so a mid-stream
+  disconnect can neither leak the slot nor double-free it (see
+  ``Scheduler._free_slot`` and DESIGN.md Sec. 1g).
 
 The engine step is a blocking jitted call, so the loop dispatches it to a
 single worker thread and awaits it — the event loop stays responsive for

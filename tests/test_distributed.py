@@ -438,6 +438,46 @@ class TestShardedServe:
         """)
         assert out.count("CHUNK_PARITY_OK") == 2
 
+    def test_sharded_prefix_cache_token_identical(self):
+        """Warm admissions over the mesh must match the single-device cold
+        engine: the row gather and warm-carry seed run with in/out pinned
+        beside the pool (dist.sharding.prefix_gather_shardings), so the
+        donated pool aliases in place and the copied prefix rows stay
+        byte-identical across devices.  Shared-prefix prompts with a pinned
+        seed set (warm tails recompute against a dequantized-int8 prefix,
+        ~1e-3 logit delta — near-tie argmax flips are possible on random
+        smoke weights, so seeds are verified; see DESIGN.md Sec. 1g)."""
+        out = _run_with_devices(8, """
+            import jax
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            cfg = ARCHS["llama3-8b"].reduced()
+            params = M.init_params(jax.random.key(0), cfg)
+            shared = jax.random.randint(jax.random.key(2), (10,), 0,
+                                        cfg.vocab_size).tolist()
+            prompts = [shared + jax.random.randint(
+                           jax.random.key(10 + i), (4,), 0,
+                           cfg.vocab_size).tolist() for i in range(4)]
+            ref = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=48,
+                chunk=4).generate_all(prompts, [6] * 4)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            rt = Runtime(mesh=mesh, data_axes=("data",),
+                         serve_resident_moe=True)
+            eng = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=48, chunk=4,
+                prefix_cache=True, rt=rt)
+            got = eng.generate_all(prompts, [6] * 4)
+            assert got == ref, (got, ref)
+            assert eng.stats["prefix_hits"] > 0
+            print("PREFIX_PARITY_OK",
+                  "hits=%d saved=%d" % (eng.stats["prefix_hits"],
+                                        eng.stats["prefill_tokens_saved"]))
+        """)
+        assert out.count("PREFIX_PARITY_OK") == 1
+
 
 class TestMeshRope:
     """The B=1 atomic prefill routes RoPE through ``apply_rope_spmd`` under

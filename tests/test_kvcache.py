@@ -166,6 +166,63 @@ class TestChunkedAppend:
                                           np.asarray(getattr(two, name)))
 
 
+class TestPrefixCopy:
+    """Row-range copy between slots — the prefix-cache admission gather."""
+
+    def test_copy_lands_prefix_and_preserves_tail(self):
+        cache = KV.init_cache(L, B, S, H, D)
+        k, v = _kv(11, t=8)
+        cache = KV.append_layer(cache, 0, k, v, 0)       # rows 0..8, all slots
+        k2, v2 = _kv(12, t=3)
+        cache = KV.append_layer(cache, 1, k2, v2, 0)
+        before = np.asarray(cache.k_q[0, 2])
+        out = KV.copy_prefix(cache, 0, 2, 5)
+        for name in ("k_q", "k_s", "v_q", "v_s"):
+            got = np.asarray(getattr(out, name))
+            np.testing.assert_array_equal(got[:, 2, :5], got[:, 0, :5])
+        # rows at/past n keep dst's dead in-place entries (no erase)
+        np.testing.assert_array_equal(np.asarray(out.k_q[0, 2, 5:]),
+                                      before[5:])
+        assert out.lengths.tolist() == [0, 0, 5]
+
+    def test_traced_args_single_compile(self):
+        """One compiled gather serves every (src, dst, n) triple."""
+        f = jax.jit(KV.copy_prefix)
+        cache = KV.init_cache(L, B, S, H, D)
+        k, v = _kv(13, t=6)
+        cache = KV.append_layer(cache, 0, k, v, 0)
+        for src, dst, n in ((0, 1, 3), (1, 2, 6), (2, 0, 1)):
+            out = f(cache, jnp.int32(src), jnp.int32(dst), jnp.int32(n))
+            np.testing.assert_array_equal(np.asarray(out.k_q[0, dst, :n]),
+                                          np.asarray(cache.k_q[0, src, :n]))
+            assert int(out.lengths[dst]) == n
+
+
+class TestSlotLedger:
+    """Host-side refcounts over pool slots (prefix-cache holds)."""
+
+    def test_lifecycle(self):
+        led = KV.SlotLedger()
+        assert led.count(3) == 0
+        assert led.incref(3) == 1            # leaf claim
+        assert led.incref(3) == 2            # alias writer
+        assert led.held() == {3}
+        assert led.decref(3) == 1            # writer released (cancel)
+        assert led.decref(3) == 0            # leaf evicted
+        assert led.held() == set()
+
+    def test_double_free_raises(self):
+        led = KV.SlotLedger()
+        led.incref(1)
+        led.decref(1)
+        with pytest.raises(RuntimeError, match="double free"):
+            led.decref(1)
+
+    def test_release_without_hold_raises(self):
+        with pytest.raises(RuntimeError):
+            KV.SlotLedger().decref(0)
+
+
 class TestSpeculativeRollback:
     def test_rewind_then_overwrite_equals_straight_append(self):
         """The speculative verify pattern: append a k+1-token window at the
