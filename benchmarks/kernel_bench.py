@@ -46,6 +46,7 @@ def run():
     emit("kernel/bitserial_vs_fused_passes", 0.0,
          "paper array: 8 bit-serial passes (Eq.3 xB_input); MXU: 1 pass")
     run_decode_attn()
+    run_verify_attn()
     run_ssm()
 
 
@@ -73,6 +74,44 @@ def run_decode_attn():
         total = -(-S // BLOCK_S)
         emit(f"kernel/decode_attn_S{S}_len{length}", t,
              f"live_blocks={live}/{total};bs={BLOCK_S}")
+
+
+def run_verify_attn():
+    """Speculative verify-window kernels: the linear (stepped causal
+    limit) and tree-mask (per-row ancestor bitmask) variants at a few
+    window sizes.  One pass scores all T window rows against the live
+    prefix, so the structural signal is rows-per-pass: T rows amortize
+    the same K/V sweep a single decode row pays."""
+    import numpy as np
+    from repro.kernels.decode_attn import ops as da_ops
+    from repro.kernels.decode_attn.kernel import BLOCK_S
+    from repro.serve.drafter import chain_parents, tree_depths_ancestors
+    key = jax.random.key(0)
+    B, S, G, rep, D = 2, 2048, 2, 2, 64
+    length = 512
+    for T in (4, 8):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, T, G * rep, D))
+        k = jax.random.normal(ks[1], (B, S, G, D))
+        v = jax.random.normal(ks[2], (B, S, G, D))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.full((B,), length, jnp.int32)
+        t = time_fn(lambda q=q, k_q=k_q, k_s=k_s, v_q=v_q, v_s=v_s,
+                    pos=pos: da_ops.verify_attention(
+                        q, k_q, k_s, v_q, v_s, pos))
+        live = -(-(length + T) // BLOCK_S)
+        emit(f"kernel/verify_attn_T{T}_len{length}", t,
+             f"rows_per_pass={T};live_blocks={live};bs={BLOCK_S}")
+        # tree mask: same window budget as a chain of T-1 drafts, two
+        # branches (the degenerate chain anc reproduces the linear mask)
+        _, anc_l = tree_depths_ancestors(chain_parents(T - 1))
+        anc = jnp.asarray(np.tile(np.asarray(anc_l, np.int32), (B, 1)))
+        t = time_fn(lambda q=q, k_q=k_q, k_s=k_s, v_q=v_q, v_s=v_s,
+                    pos=pos, anc=anc: da_ops.verify_attention_tree(
+                        q, k_q, k_s, v_q, v_s, pos, anc))
+        emit(f"kernel/verify_attn_tree_T{T}_len{length}", t,
+             f"rows_per_pass={T};live_blocks={live};ancestor_mask=int32")
 
 
 def run_ssm():
@@ -103,6 +142,7 @@ if __name__ == "__main__":
     print("name,us_per_call,derived")
     if "--only" in sys.argv:
         which = sys.argv[sys.argv.index("--only") + 1]
-        {"decode-attn": run_decode_attn, "ssm": run_ssm}[which]()
+        {"decode-attn": run_decode_attn, "verify-attn": run_verify_attn,
+         "ssm": run_ssm}[which]()
     else:
         run()

@@ -17,6 +17,13 @@ iteration): each record reports the draft acceptance rate and the TPOT
 speedup relative to that policy's non-speculative (k=0) run — the paper's
 per-token weight-read amortization, measured end to end.
 
+With ``--spec-tree 0,4`` the sweep adds the tree-draft lane (a token
+*tree* of N nodes per slot, ancestor-masked verify, accepted root-path
+compacted in place): a tree record's ``speedup`` column is relative to
+the non-speculative baseline like every other record, and its ``vs-lin``
+column is the TPOT speedup over the linear ``spec_k`` record with the
+same draft budget — equal budget, tree vs chain.
+
 With ``--multi-step 1,2,4`` the sweep also covers the fused multi-step
 decode lane (m greedy iterations per jitted call, argmax fed back on
 device): the speedup column for an ``m>1`` record is relative to the same
@@ -93,7 +100,7 @@ def percentile(sorted_vals, q):
 
 
 def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1,
-                prefix_cache=None):
+                prefix_cache=None, spec_tree=0):
     max_len = args.max_prompt + args.max_new + 1
     if prefix_cache is None:
         prefix_cache = getattr(args, "prefix_cache", False)
@@ -101,7 +108,9 @@ def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1,
         cfg, params, n_slots=args.slots, max_len=max_len, rt=rt,
         policy=args.policy, chunk=args.chunk,
         max_step_tokens=args.max_step_tokens,
-        spec_k=spec_k, drafter=args.drafter, multi_step=multi_step,
+        spec_k=spec_k, spec_tree=spec_tree,
+        spec_branch=getattr(args, "spec_branch", 2),
+        drafter=args.drafter, multi_step=multi_step,
         prefix_cache=prefix_cache,
         prefix_cache_rows=getattr(args, "prefix_rows", None))
 
@@ -128,8 +137,10 @@ def warm_engine(eng, args):
         eng._pcache.clear()
         for k in eng._pcache.stats:
             eng._pcache.stats[k] = 0
-    for k in eng.stats:
-        eng.stats[k] = 0
+    for k, v in eng.stats.items():
+        # list-valued stats (the spec accepted-length histogram) re-zero
+        # in place at their length; scalars reset to 0
+        eng.stats[k] = [0] * len(v) if isinstance(v, list) else 0
 
 
 def replay_trace(eng, arrivals, prompts, budgets, priorities, users):
@@ -216,6 +227,7 @@ def run_parity(cfg, params, args, rt):
                                 args.max_new + 1))
                for _ in range(args.requests)]
     spec_k = max(int(s) for s in args.spec_k.split(","))
+    spec_tree = max(int(s) for s in args.spec_tree.split(","))
     policies = (["fifo", "sjf", "priority:preempt",
                  f"fair:{max(1, args.max_new // 2)}"]
                 if args.policies == "all" else args.policies.split(","))
@@ -248,6 +260,16 @@ def run_parity(cfg, params, args, rt):
                      f"saved={eng.stats['prefill_tokens_saved']}")
         print(f"PARITY_OK {pol} chunk={args.chunk} spec_k={eng.spec_k} "
               f"({sum(len(o) for o in got)} tokens){extra}")
+        if spec_tree > 0:
+            # tree lane parity against the same cache-less reference: the
+            # ancestor-masked verify + path compaction must stream the
+            # exact tokens the plain (and linear-spec) engines produced
+            teng = make_engine(cfg, params, args, rt, spec_tree=spec_tree)
+            tgot = asyncio.run(stream_all(teng))
+            assert tgot == ref, (pol, "tree lane diverged", tgot, ref)
+            print(f"PARITY_OK {pol} chunk={args.chunk} "
+                  f"spec_tree={teng.spec_tree} branch={teng.spec_branch} "
+                  f"({sum(len(o) for o in tgot)} tokens)")
 
 
 def summarize(policy, eng, reqs, wall):
@@ -280,11 +302,17 @@ def summarize(policy, eng, reqs, wall):
         # eng.spec_k, not the requested value: the engine zeroes it for
         # SSM stacks (no rewindable state) and never builds a drafter
         "spec_k": eng.spec_k,
-        "drafter": eng._drafter.name if eng.spec_k else None,
+        "spec_tree": eng.spec_tree,
+        "spec_branch": eng.spec_branch if eng.spec_tree else None,
+        "drafter": (eng._drafter.name
+                    if eng.spec_k or eng.spec_tree else None),
         "verify_steps": eng.stats["verify_steps"],
         # None (JSON null), never NaN, when nothing was drafted
         "acceptance_rate": (eng.acceptance_rate
                             if eng.stats["spec_drafted"] else None),
+        # per-window accepted-length histogram (index = drafted tokens
+        # committed by one verify pass); null when no spec lane ran
+        "spec_accept_hist": eng.stats.get("spec_accept_hist"),
         # eng.multi_step (like eng.spec_k): 1 for SSM stacks
         "multi_step": eng.multi_step,
         "multi_blocks": eng.stats["multi_blocks"],
@@ -311,7 +339,8 @@ def summarize(policy, eng, reqs, wall):
     return rec
 
 
-COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("multi_step", "%5d"),
+COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("spec_tree", "%5d"),
+        ("multi_step", "%5d"),
         ("throughput_tok_s", "%8.1f"),
         ("ttft_p50_ms", "%9.1f"), ("ttft_p99_ms", "%9.1f"),
         ("tpot_p50_ms", "%9.2f"), ("tpot_p99_ms", "%9.2f"),
@@ -319,10 +348,11 @@ COLS = [("policy", "%-16s"), ("spec_k", "%6d"), ("multi_step", "%5d"),
         ("queue_delay_p99_ms", "%9.1f"), ("preemptions", "%5d"),
         ("max_step_prefill_tokens", "%11d"),
         ("host_ms", "%8.2f"), ("device_ms", "%8.2f"), ("xfer_bytes", "%7.0f"),
-        ("acceptance_rate", "%7.2f"), ("tpot_speedup", "%8.2f")]
-HEAD = ("policy            spec_k  mstep     tok/s  ttft-p50  ttft-p99  "
-        "tpot-p50  tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  "
-        "max_pf/step   host_ms   dev_ms  xfer_B   accept  speedup")
+        ("acceptance_rate", "%7.2f"), ("tpot_speedup", "%8.2f"),
+        ("tpot_speedup_vs_linear", "%8.2f")]
+HEAD = ("policy            spec_k   tree  mstep     tok/s  ttft-p50  "
+        "ttft-p99  tpot-p50  tpot-p99   lat-p99  qdel-p50  qdel-p99  prmpt  "
+        "max_pf/step   host_ms   dev_ms  xfer_B   accept  speedup   vs-lin")
 # appended only when --prefix-cache is on (fields are absent otherwise)
 PREFIX_COLS = [("prefix_hits", "%6d"), ("prefill_tokens_saved", "%8d")]
 PREFIX_HEAD = "  pfhits   pfsaved"
@@ -349,6 +379,14 @@ def main():
                     help="speculative decode draft lengths to sweep, e.g. "
                          '"0,2,4,8" (0 = the non-speculative baseline the '
                          "TPOT speedup column is relative to)")
+    ap.add_argument("--spec-tree", default="0", metavar="N[,N...]",
+                    help="tree-draft node budgets to sweep, e.g. \"0,4\" "
+                         "(0 = off).  A tree record's vs-lin column is its "
+                         "TPOT speedup over the linear spec_k record with "
+                         "the same draft budget — equal budget, tree vs "
+                         "chain")
+    ap.add_argument("--spec-branch", type=int, default=2,
+                    help="tree-draft branching factor (with --spec-tree)")
     ap.add_argument("--drafter", default="ngram",
                     help="draft proposer: ngram[:N] | mtp")
     ap.add_argument("--multi-step", default="1", metavar="M[,M...]",
@@ -403,22 +441,27 @@ def main():
           f"new {max(1, args.max_new//2)}..{args.max_new} "
           f"chunk={args.chunk} budget={args.max_step_tokens}")
     spec_ks = [int(s) for s in args.spec_k.split(",")]
+    spec_trees = [int(s) for s in args.spec_tree.split(",")]
     multi_ms = [int(s) for s in args.multi_step.split(",")]
-    # the spec and fused lanes don't combine (spec_k>0 takes precedence in
-    # the engine), so sweep spec at m=1 and multi-step at k=0; a requested
-    # m=1 baseline is kept even when --spec-k omits 0
-    combos = [(K, 1) for K in spec_ks]
+    # the lanes don't combine (spec_tree > spec_k > multi_step precedence
+    # in the engine), so sweep each against the shared (k=0, m=1, tree=0)
+    # baseline; a requested m=1 baseline is kept even when --spec-k omits 0
+    combos = [(K, 1, 0) for K in spec_ks]
     for m in multi_ms:
-        if (0, m) not in combos:
-            combos.append((0, m))
+        if (0, m, 0) not in combos:
+            combos.append((0, m, 0))
+    for n in spec_trees:
+        if n and (0, 1, n) not in combos:
+            combos.append((0, 1, n))
     cols = COLS + (PREFIX_COLS if args.prefix_cache else [])
     print(HEAD + (PREFIX_HEAD if args.prefix_cache else ""))
     records = {}
     for pol in policies:
         args.policy = pol
         recs = []
-        for K, m in combos:
-            eng = make_engine(cfg, params, args, rt, spec_k=K, multi_step=m)
+        for K, m, n in combos:
+            eng = make_engine(cfg, params, args, rt, spec_k=K, multi_step=m,
+                              spec_tree=n)
             warm_engine(eng, args)
             if args.serve:
                 reqs, wall = serve_trace(eng, args, arrivals, prompts,
@@ -430,17 +473,27 @@ def main():
         # speedup baseline: the (k=0, m=1) record wherever it sits in the
         # sweep (None — JSON null — when there is no baseline or NaN TPOTs)
         base = next((r for r in recs
-                     if r["spec_k"] == 0 and r["multi_step"] == 1), None)
+                     if r["spec_k"] == 0 and r["multi_step"] == 1
+                     and r["spec_tree"] == 0), None)
         base_tpot = base["tpot_p50_ms"] if base else None
         if base_tpot is None or base_tpot != base_tpot:
             base_tpot = None
+        # per-budget linear-spec TPOTs: a tree record's vs-lin column is
+        # its speedup over the chain window with the same draft budget
+        lin_tpot = {r["spec_k"]: r["tpot_p50_ms"] for r in recs
+                    if r["spec_k"] and r["multi_step"] == 1
+                    and r["spec_tree"] == 0}
         for rec in recs:
             tpot = rec["tpot_p50_ms"]
             rec["tpot_speedup"] = (base_tpot / tpot
                                    if base_tpot and tpot == tpot else None)
-            K, m = rec["spec_k"], rec["multi_step"]
-            key = pol if (K == 0 and m == 1) else \
-                (f"{pol}@spec{K}" if K else f"{pol}@m{m}")
+            lin = lin_tpot.get(rec["spec_tree"]) if rec["spec_tree"] else None
+            rec["tpot_speedup_vs_linear"] = (
+                lin / tpot if lin and lin == lin and tpot == tpot else None)
+            K, m, n = rec["spec_k"], rec["multi_step"], rec["spec_tree"]
+            key = pol if (K == 0 and m == 1 and n == 0) else (
+                f"{pol}@spec{K}" if K else
+                f"{pol}@tree{n}" if n else f"{pol}@m{m}")
             records[key] = rec
             print("  ".join(_cell(fmt, rec[k]) for k, fmt in cols))
 
@@ -451,7 +504,8 @@ def main():
                "rate_req_s": args.rate, "mesh": args.mesh,
                "seed": args.seed, "chunk": args.chunk,
                "max_step_tokens": args.max_step_tokens,
-               "spec_k": spec_ks, "drafter": args.drafter,
+               "spec_k": spec_ks, "spec_tree": spec_trees,
+               "spec_branch": args.spec_branch, "drafter": args.drafter,
                "multi_step": multi_ms,
                "prefix_cache": args.prefix_cache,
                "policies": records}

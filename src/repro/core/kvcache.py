@@ -71,6 +71,80 @@ def chunk_update(buf: jax.Array, new: jax.Array, start: jax.Array | int,
     return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), idx)
 
 
+def pool_headroom(spec_k: int = 0, spec_tree: int = 0,
+                  multi_step: int = 1) -> int:
+    """Scratch rows each slot needs past ``max_len`` — the one audited
+    sizing rule for every lane that writes ahead of the committed cursor:
+
+    - linear spec: a verify window appends ``spec_k + 1`` rows at
+      ``pos .. pos + spec_k`` with ``pos <= max_len - 1``, so ``spec_k``
+      rows of headroom;
+    - tree spec: a window appends ``spec_tree + 1`` node rows (root +
+      drafts) at ``pos .. pos + spec_tree`` — ``spec_tree`` rows;
+    - fused multi-step: a block appends up to ``m`` rows at
+      ``pos .. pos + m - 1`` before the host truncates a mid-block stop —
+      ``m - 1`` rows.
+
+    The lanes are mutually exclusive per step, so the pool only needs the
+    max.  Every row a lane writes past a slot's committed cursor must fall
+    inside this margin — rollback is a cursor move (``rewind_pos``), and
+    rows beyond ``max_len + headroom`` would clamp into live rows of the
+    window itself.
+    """
+    if min(spec_k, spec_tree, multi_step - 1) < 0:
+        raise ValueError("negative spec_k/spec_tree or multi_step < 1")
+    return max(spec_k, spec_tree, multi_step - 1)
+
+
+def path_gather(buf: jax.Array, base: jax.Array, sel: jax.Array,
+                keep: jax.Array) -> jax.Array:
+    """Compact an accepted tree path's scattered rows into contiguous rows.
+
+    buf: [L, B, S, ...] (slot axis 1, sequence axis 2 — a pooled decode
+    leaf or a stacked reference-cache leaf); base: [B] int32 committed
+    cursors; sel: [B, W] int32 in-window *node indices* of the accepted
+    root-path in order (``sel[b, w]`` >= w + 1: tree nodes are
+    topologically ordered, so a path only ever moves rows *down*);
+    keep: [B] int32 accepted path length (<= W).
+
+    Row ``base[b] + sel[b, w]`` moves to ``base[b] + 1 + w`` for
+    ``w < keep[b]`` (row ``base[b]`` — the root / last committed token —
+    is already in place); rows past the path are left as dead in-place
+    entries for ``rewind_pos`` to hide, per the SLC write-in-place
+    discipline.  All index operands may be traced.
+    """
+    W = sel.shape[1]
+    base = jnp.asarray(base, jnp.int32)
+    src = (base[:, None] + jnp.asarray(sel, jnp.int32)).reshape(
+        (1, buf.shape[1], W) + (1,) * (buf.ndim - 3))
+    rows = jnp.take_along_axis(buf, src, axis=2)         # [L, B, W, ...]
+
+    def one(b, r, start, n):
+        # b: [L, S, ...]; r: [L, W, ...] — per-slot contiguous write-back
+        old = jax.lax.dynamic_slice_in_dim(b, start, W, axis=1)
+        m = (jnp.arange(W) < n).reshape((1, W) + (1,) * (b.ndim - 2))
+        return jax.lax.dynamic_update_slice_in_dim(
+            b, jnp.where(m, r, old), start, axis=1)
+
+    return jax.vmap(one, in_axes=(1, 1, 0, 0), out_axes=1)(
+        buf, rows, base + 1, jnp.asarray(keep, jnp.int32))
+
+
+def gather_path(cache: "KVCache", base: jax.Array, sel: jax.Array,
+                keep: jax.Array) -> "KVCache":
+    """Reference-cache accepted-path compaction: apply :func:`path_gather`
+    to every leaf and commit the path — each slot's length becomes
+    ``base + 1 + keep`` (root row + accepted path), the tree-spec sibling
+    of :func:`rewind_lengths`."""
+    return dataclasses.replace(
+        cache,
+        k_q=path_gather(cache.k_q, base, sel, keep),
+        k_s=path_gather(cache.k_s, base, sel, keep),
+        v_q=path_gather(cache.v_q, base, sel, keep),
+        v_s=path_gather(cache.v_s, base, sel, keep),
+        lengths=jnp.asarray(base, jnp.int32) + 1 + jnp.asarray(keep, jnp.int32))
+
+
 def append_layer_chunk(cache: "KVCache", layer: int, k: jax.Array,
                        v: jax.Array, start: jax.Array | int) -> "KVCache":
     """Chunked-prefill append of ``[B, C, H_kv, D_h]`` float k/v into one

@@ -351,6 +351,25 @@ def verify_shardings(n_slots: int, mesh) -> dict:
     }
 
 
+def tree_verify_shardings(n_slots: int, mesh) -> dict:
+    """Tree-verify extras, pinned beside :func:`verify_shardings`: the
+    [B, T] per-slot node depths and ancestor bitmasks shard their slot axis
+    over the data axes like the draft tokens (the mask rides the same rows
+    of the window), while the tree-commit operands replicate — they feed
+    per-slot dynamic slicing inside the jitted path gather, exactly like
+    the prefix-cache admission scalars:
+
+    * ``window`` — depth / anc [B, T] int32 (slot axis data-sharded);
+    * ``commit`` — base [B], sel [B, W], keep [B], pos [B] (replicated,
+      matching the pool's replicated ``pos`` leaf the new cursor lands in).
+    """
+    b = batch_entry(n_slots, mesh)
+    return {
+        "window": NamedSharding(mesh, P(b, None)),
+        "commit": replicated(mesh),
+    }
+
+
 def prefix_gather_shardings(mesh) -> dict:
     """Prefix-cache admission I/O, pinned beside the pool: the row gather
     (``transformer.copy_slot_prefix``) and the warm-carry dequant take the

@@ -154,3 +154,105 @@ def verify_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, lengths, *,
                        jnp.asarray(lengths, jnp.int32),
                        t=T, rep=rep, bs=bs, interpret=interpret)
     return out.reshape(B, G, T, rep, D)
+
+
+def _tree_kernel(pos_ref, anc_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref,
+                 vs_ref, o_ref, m_ref, l_ref, acc_ref, *, n_s: int, bs: int,
+                 d: int, t: int, rep: int):
+    """Tree-verify variant of :func:`_kernel`: the ``t`` query tokens are
+    the nodes of a draft *tree* whose rows land at cache positions
+    ``pos .. pos + t - 1``.  Row ``r`` (node ``r // rep``) sees the
+    committed prefix (keys ``< pos_ref[b, 0]``) plus exactly the in-window
+    keys whose node index is an ancestor-or-self of its node — bit ``j``
+    of ``anc_ref[b, r // rep]`` (int32, so t <= 31 in-window bits stay in
+    the sign-safe range).  The stepped causal mask of the linear verify is
+    the special case anc[i] = (1 << (i+1)) - 1 (a chain)."""
+    b_idx = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = pos_ref[b_idx, 0]
+
+    # no row sees past the window's last node (base + t - 1); blocks past it
+    # are fully masked — same dead-block skip as the linear kernels
+    @pl.when(s_idx * bs < base + t)
+    def _compute():
+        q = q_ref[...].astype(jnp.int32)             # [t*rep, D]
+        k = k_ref[...].astype(jnp.int32)             # [bs, D]
+        s_int = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.int32)
+        scores = (s_int.astype(jnp.float32) * qs_ref[...]
+                  * ks_ref[...].reshape(1, bs) * (1.0 / math.sqrt(d)))
+        kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        idx = kpos - base                             # in-window node index
+        ancs = [anc_ref[b_idx, i] for i in range(t)]  # t scalar SMEM reads
+        anc = jnp.stack(ancs).reshape(t, 1)
+        anc = jnp.broadcast_to(anc, (t, rep)).reshape(t * rep, 1)
+        bit = jax.lax.shift_right_logical(anc, jnp.clip(idx, 0, 31)) & 1
+        visible = (kpos < base) | ((idx >= 0) & (idx < t) & (bit == 1))
+        scores = jnp.where(visible, scores, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        vf = v_ref[...].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, vf, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _final():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def verify_tree_attn_pallas(q_q, q_s, k_q, k_s, v_q, v_s, pos, anc, *,
+                            bs: int = BLOCK_S, interpret: bool = True):
+    """Tree-verify flash decoding: q_q: [B,G,T,rep,D] int8 (T tree nodes
+    per slot at cache rows ``pos .. pos + T - 1``; node 0 is the last
+    committed token / tree root); ``pos``: [B] int32 committed-prefix
+    cursors; ``anc``: [B,T] int32 per-node ancestor bitmasks (bit j set
+    iff node j is an ancestor-or-self of node i) -> [B,G,T,rep,D] f32.
+    Same launch geometry as :func:`verify_attn_pallas` with the stepped
+    limit replaced by (committed prefix) | (ancestor bit)."""
+    B, G, T, rep, D = q_q.shape
+    S = k_q.shape[1]
+    bs = min(bs, S)
+    n_s = pl.cdiv(S, bs)
+    R = T * rep
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(B, 1)
+    out = pl.pallas_call(
+        functools.partial(_tree_kernel, n_s=n_s, bs=bs, d=D, t=T, rep=rep),
+        grid=(B, G, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # pos
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # anc
+            pl.BlockSpec((None, None, R, D), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, R, 1), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+            pl.BlockSpec((None, bs, None, D), lambda b, g, s: (b, s, g, 0)),
+            pl.BlockSpec((None, bs, None), lambda b, g, s: (b, s, g)),
+        ],
+        out_specs=pl.BlockSpec((None, None, R, D), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, R, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos2, jnp.asarray(anc, jnp.int32),
+      q_q.reshape(B, G, R, D), q_s.reshape(B, G, R, 1),
+      k_q, k_s, v_q, v_s)
+    return out.reshape(B, G, T, rep, D)

@@ -42,3 +42,24 @@ def verify_attention(q, k_q, k_s, v_q, v_s, pos, interpret: bool = True):
     out = K.verify_attn_pallas(q_q, q_s, k_q, k_s[..., 0], v_q, v_s[..., 0],
                                lens, interpret=interpret)
     return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, D).astype(q.dtype)
+
+
+def verify_attention_tree(q, k_q, k_s, v_q, v_s, pos, anc,
+                          interpret: bool = True):
+    """Tree-verify attention: q: [B,T,H,D] float (T draft-tree nodes per
+    slot at rows ``pos[b]..pos[b]+T-1``; node 0 = root / last committed
+    token); ``anc``: [B,T] int32 ancestor-or-self bitmasks.  Node t of
+    slot b sees the committed prefix plus key ``pos[b]+j`` iff bit j of
+    ``anc[b, t]`` is set -> [B,T,H,D]."""
+    B, T, H, D = q.shape
+    G = k_q.shape[2]
+    rep = H // G
+    q_q, q_s = quant.quantize_kv(q.reshape(B, T * H, D))
+    q_q = q_q.reshape(B, T, G, rep, D).transpose(0, 2, 1, 3, 4)
+    q_s = q_s.reshape(B, T, G, rep, 1).transpose(0, 2, 1, 3, 4)
+    pos_b = slot_positions(pos, B)
+    out = K.verify_tree_attn_pallas(q_q, q_s, k_q, k_s[..., 0],
+                                    v_q, v_s[..., 0], pos_b,
+                                    jnp.asarray(anc, jnp.int32),
+                                    interpret=interpret)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, D).astype(q.dtype)

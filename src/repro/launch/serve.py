@@ -24,6 +24,12 @@ in one batched step, roll rejected suffixes back via a cursor rewind):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --continuous --chunk 4 --spec-k 4 --drafter ngram
 
+Tree-draft speculative decode (a token *tree* per slot instead of a
+chain: ancestor-masked verify, accepted root-path compacted in place):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --continuous --chunk 4 --spec-tree 4 --spec-branch 2
+
 Fused multi-step decode (``m`` greedy iterations per jitted call with the
 argmax fed back on device — one host round-trip per ``m`` tokens whenever
 the pool is in pure decode steady state):
@@ -135,7 +141,10 @@ def _run_continuous(cfg, params, args):
                                    quantize=not args.no_quantize,
                                    policy=args.policy, chunk=args.chunk,
                                    max_step_tokens=args.max_step_tokens,
-                                   spec_k=args.spec_k, drafter=args.drafter,
+                                   spec_k=args.spec_k,
+                                   spec_tree=args.spec_tree,
+                                   spec_branch=args.spec_branch,
+                                   drafter=args.drafter,
                                    multi_step=args.multi_step,
                                    prefix_cache=args.prefix_cache,
                                    prefix_cache_rows=args.prefix_rows)
@@ -160,10 +169,13 @@ def _run_continuous(cfg, params, args):
     print(f"steps={eng.stats['steps']} chunks={eng.stats['chunks']} "
           f"preemptions={eng.stats['preemptions']} "
           f"max prefill tokens/step={eng.stats['max_step_prefill_tokens']}")
-    if eng.spec_k:
-        print(f"spec: k={eng.spec_k} drafter={eng._drafter.name} "
+    if eng.spec_k or eng.spec_tree:
+        lane = (f"tree={eng.spec_tree} branch={eng.spec_branch}"
+                if eng.spec_tree else f"k={eng.spec_k}")
+        print(f"spec: {lane} drafter={eng._drafter.name} "
               f"verify_steps={eng.stats['verify_steps']} "
-              f"acceptance={eng.acceptance_rate:.2%}")
+              f"acceptance={eng.acceptance_rate:.2%} "
+              f"accept_hist={eng.stats['spec_accept_hist']}")
     if eng.multi_step > 1:
         print(f"multi-step: m={eng.multi_step} "
               f"blocks={eng.stats['multi_blocks']} "
@@ -190,7 +202,10 @@ def _run_serve(cfg, params, args):
                                    quantize=not args.no_quantize,
                                    policy=args.policy, chunk=args.chunk,
                                    max_step_tokens=args.max_step_tokens,
-                                   spec_k=args.spec_k, drafter=args.drafter,
+                                   spec_k=args.spec_k,
+                                   spec_tree=args.spec_tree,
+                                   spec_branch=args.spec_branch,
+                                   drafter=args.drafter,
                                    multi_step=args.multi_step,
                                    prefix_cache=args.prefix_cache,
                                    prefix_cache_rows=args.prefix_rows)
@@ -268,6 +283,13 @@ def main():
                     help="speculative decode: draft K tokens per slot and "
                          "verify all K+1 positions in one batched step "
                          "(0 = off)")
+    ap.add_argument("--spec-tree", type=int, default=0, metavar="N",
+                    help="tree-draft speculative decode: draft a token tree "
+                         "of N nodes per slot and verify the whole tree in "
+                         "one ancestor-masked step (0 = off; takes "
+                         "precedence over --spec-k)")
+    ap.add_argument("--spec-branch", type=int, default=2, metavar="B",
+                    help="tree-draft branching factor (with --spec-tree)")
     ap.add_argument("--drafter", default="ngram",
                     help='draft proposer: ngram[:N] (prompt lookup) | mtp '
                          '(multi-token-prediction head, cfg.mtp archs)')

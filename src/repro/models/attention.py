@@ -269,9 +269,26 @@ def decode_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, length: jax.Array,
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def tree_visibility_mask(pos_b: jax.Array, anc: jax.Array, S: int,
+                         T: int) -> jax.Array:
+    """[B, T, S] bool tree-verify visibility: node ``t`` of slot ``b`` sees
+    the committed prefix (keys ``< pos_b[b]``) plus in-window key
+    ``pos_b[b]+j`` iff bit j of ``anc[b, t]`` (int32 ancestor-or-self
+    bitmask; node 0 = root = last committed token) is set.  The linear
+    verify's stepped causal mask is the chain special case
+    ``anc[i] = (1 << (i+1)) - 1``."""
+    idx = jnp.arange(S, dtype=jnp.int32)[None, :] - pos_b[:, None]   # [B,S]
+    committed = idx < 0
+    in_win = (idx >= 0) & (idx < T)
+    bit = jax.lax.shift_right_logical(
+        jnp.asarray(anc, jnp.int32)[:, :, None],
+        jnp.clip(idx, 0, 31)[:, None, :]) & 1                        # [B,T,S]
+    return committed[:, None, :] | (in_win[:, None, :] & (bit == 1))
+
+
 def verify_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, pos: jax.Array,
                           backend: str = "dense",
-                          inter_dtype=jnp.float32) -> jax.Array:
+                          inter_dtype=jnp.float32, anc=None) -> jax.Array:
     """Speculative-verify attention: ``q`` is [B, T, H, D] — T query tokens
     per slot sitting at positions ``pos[b] .. pos[b]+T-1`` (the last
     committed token plus T-1 drafts); cache layout as in
@@ -284,11 +301,26 @@ def verify_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, pos: jax.Array,
     identical* to the T=1 decode: int8xint8 scores are exact integer
     arithmetic, so acceptance decisions match step-by-step decode
     bit-for-bit.
+
+    With ``anc`` ([B, T] int32 ancestor bitmasks) the T tokens are a draft
+    *tree* and the stepped mask becomes :func:`tree_visibility_mask`; a
+    node's unmasked keys hold exactly the values sequential decode of its
+    root-path would see.  Nodes whose ancestor set is a window *prefix*
+    (chain-prefix nodes) stay bit-exact with sequential decode; a node
+    whose path skips an interleaved sibling sees the same visible values
+    at shifted lane positions — masked keys weigh exactly zero, but the
+    vectorised softmax/PV reductions associate across lanes differently,
+    so those rows match only up to float reduction order (~1 ulp; the
+    engine's greedy token parity is pinned by test seeds, like the warm
+    prefix bar in DESIGN.md Sec. 1g).
     """
     B, T, H, D = q.shape
     pos_b = KV.slot_positions(pos, B)
     if backend in ("fused_int8", "pallas"):
         from repro.kernels.decode_attn import ops as da_ops
+        if anc is not None:
+            return da_ops.verify_attention_tree(q, k_q, k_s, v_q, v_s,
+                                                pos_b, anc)
         return da_ops.verify_attention(q, k_q, k_s, v_q, v_s, pos_b)
     G = k_q.shape[2]
     rep = H // G
@@ -302,10 +334,15 @@ def verify_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, pos: jax.Array,
     k_sc = k_s[..., 0].transpose(0, 2, 1)[:, :, None, :]   # [B,G,1,S]
     scores = s_int.astype(jnp.float32) * q_scale * k_sc / math.sqrt(D)
     S = k_q.shape[1]
-    # row r = (t, rep) attends keys [0, pos + t]
-    t_of_row = jnp.arange(T * rep) // rep
-    limit = pos_b[:, None, None, None] + t_of_row[None, None, :, None] + 1
-    mask = jnp.arange(S)[None, None, None, :] < limit
+    if anc is not None:
+        m3 = tree_visibility_mask(pos_b, anc, S, T)        # [B,T,S]
+        mask = (jnp.broadcast_to(m3[:, None, :, None, :], (B, G, T, rep, S))
+                .reshape(B, G, T * rep, S))
+    else:
+        # row r = (t, rep) attends keys [0, pos + t]
+        t_of_row = jnp.arange(T * rep) // rep
+        limit = pos_b[:, None, None, None] + t_of_row[None, None, :, None] + 1
+        mask = jnp.arange(S)[None, None, None, :] < limit
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)                    # controller op
     vf = (v_q.astype(inter_dtype) * v_s.astype(inter_dtype))
@@ -317,7 +354,7 @@ def verify_attention_int8(q: jax.Array, k_q, k_s, v_q, v_s, pos: jax.Array,
 
 def gqa_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                k_q, k_s, v_q, v_s, backend: str = "dense",
-               inter_dtype=jnp.float32):
+               inter_dtype=jnp.float32, depth=None, anc=None):
     """Multi-token decode for the speculative verify step: consume ``x``
     ([B, T, d], the last committed token plus T-1 drafts per slot) at each
     slot's cursor.  The T tokens' int8 K/V land at the per-slot offset in
@@ -326,7 +363,15 @@ def gqa_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     over slots — and all T positions are scored in one pass.  K/V rows and
     integer scores are bit-identical to T sequential :func:`gqa_decode`
     calls, which is what makes greedy speculative decode token-identical
-    to the plain engine."""
+    to the plain engine.
+
+    Tree mode (``depth``/``anc`` both [B, T] int32): the T tokens are draft
+    *tree* nodes — node i's row still lands at cache offset ``pos + i``,
+    but RoPE rotates it at its tree depth (``pos + depth[b, i]``) and the
+    stepped mask becomes the ancestor mask, so each node's K row and
+    scores match what sequential decode of its root-path would produce
+    (chain-prefix nodes bit-exactly; past a skipped sibling, up to float
+    reduction order — see :func:`verify_attention_int8`)."""
     B, T, _ = x.shape
     hd = cfg.head_dim
     pos_b = KV.slot_positions(pos, B)
@@ -337,7 +382,8 @@ def gqa_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
         q = L.apply_norm(p["q_norm"], q)
         k = L.apply_norm(p["k_norm"], k)
     if cfg.rope_theta:
-        pp = pos_b[:, None] + jnp.arange(T)[None, :]
+        off = jnp.arange(T)[None, :] if depth is None else depth
+        pp = pos_b[:, None] + off
         q = L.apply_rope(q, pp, cfg.rope_theta)
         k = L.apply_rope(k, pp, cfg.rope_theta)
     kq_new, ks_new = quant.quantize_kv(k)
@@ -347,7 +393,7 @@ def gqa_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     v_q = KV.batched_update(v_q, vq_new, pos_b)
     v_s = KV.batched_update(v_s, vs_new, pos_b)
     o = verify_attention_int8(q, k_q, k_s, v_q, v_s, pos_b, backend,
-                              inter_dtype)
+                              inter_dtype, anc=anc)
     out = L.apply_linear(L._lin(p, "wo"), o.reshape(B, T, -1), backend)
     return out, (k_q, k_s, v_q, v_s)
 
@@ -475,18 +521,21 @@ def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
 
 def mla_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                c_q: jax.Array, c_s: jax.Array, backend: str = "dense",
-               inter_dtype=jnp.float32):
+               inter_dtype=jnp.float32, depth=None, anc=None):
     """Absorbed MLA decode over T tokens per slot — the speculative verify
     sibling of :func:`mla_decode`.  The T compressed latents append at the
     per-slot cursor (multi-token :func:`KV.batched_update`); query ``t``
     masks the latent cache to ``[0, pos[b]+t]``, so all T positions score
-    against exactly the prefix T sequential decode steps would see."""
+    against exactly the prefix T sequential decode steps would see.
+    Tree mode (``depth``/``anc``): RoPE at tree depth, ancestor mask — see
+    :func:`gqa_verify`."""
     B, T, _ = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
     pos_b = KV.slot_positions(pos, B)
-    pp = pos_b[:, None] + jnp.arange(T)[None, :]
+    off = jnp.arange(T)[None, :] if depth is None else depth
+    pp = pos_b[:, None] + off
     q_lat = L.apply_norm(p["q_norm"], L.apply_linear(L._lin(p, "wq_a"), x, backend))
     q = L.apply_linear(L._lin(p, "wq_b"), q_lat, backend).reshape(B, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
@@ -512,7 +561,10 @@ def mla_verify(p: Params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                          cache[..., r:], preferred_element_type=jnp.float32))
     scores = scores / math.sqrt(dn + dr)
     S = c_q.shape[1]
-    mask = jnp.arange(S)[None, None, None, :] < (pp + 1)[:, :, None, None]
+    if anc is not None:
+        mask = tree_visibility_mask(pos_b, anc, S, T)[:, :, None, :]
+    else:
+        mask = jnp.arange(S)[None, None, None, :] < (pp + 1)[:, :, None, None]
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bths,bsr->bthr", w.astype(inter_dtype), cache[..., :r],

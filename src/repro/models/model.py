@@ -148,14 +148,23 @@ def multi_decode_step(params, cfg: ModelConfig, state: dict, token, m: int,
     return T.multi_decode_step(params, cfg, state, token, m, rt)
 
 
-def verify_step(params, cfg: ModelConfig, state: dict, tokens, rt: Runtime):
+def verify_step(params, cfg: ModelConfig, state: dict, tokens, rt: Runtime,
+                depth=None, anc=None):
     """Speculative-decode verify: ``tokens`` [B, T] (last committed token +
     T-1 drafts per slot) -> (logits [B, T, V], hidden [B, T, d], state with
-    ``pos + T``).  Decoder-only attention stacks; see
-    :func:`repro.models.transformer.verify_step`."""
+    ``pos + T``).  With ``depth``/``anc`` ([B, T] int32) the window is a
+    draft *tree* (ancestor masking, depth positions).  Decoder-only
+    attention stacks; see :func:`repro.models.transformer.verify_step`."""
     if cfg.family == "encdec":
         raise NotImplementedError("speculative decode targets decoder-only LMs")
-    return T.verify_step(params, cfg, state, tokens, rt)
+    return T.verify_step(params, cfg, state, tokens, rt, depth=depth, anc=anc)
+
+
+def tree_commit(state: dict, base, sel, keep, pos):
+    """Compact a verified tree window's accepted root-path rows into
+    contiguous committed rows and rewind the cursor — see
+    :func:`repro.models.transformer.tree_commit`."""
+    return T.tree_commit(state, base, sel, keep, pos)
 
 
 def mtp_draft(params, cfg: ModelConfig, hidden, token, pos, k: int,
@@ -164,6 +173,16 @@ def mtp_draft(params, cfg: ModelConfig, hidden, token, pos, k: int,
     if cfg.family == "encdec":
         raise NotImplementedError("speculative decode targets decoder-only LMs")
     return T.mtp_draft(params, cfg, hidden, token, pos, k, rt)
+
+
+def mtp_draft_tree(params, cfg: ModelConfig, hidden, token, pos, n: int,
+                   branch: int, rt: Runtime):
+    """Beam the MTP head into a static draft tree (tokens [B, n],
+    chain-major node order; topology from
+    :func:`repro.models.transformer.mtp_chain_lengths`)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("speculative decode targets decoder-only LMs")
+    return T.mtp_draft_tree(params, cfg, hidden, token, pos, n, branch, rt)
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):

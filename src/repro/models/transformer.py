@@ -521,20 +521,23 @@ def multi_decode_step(p: Params, cfg: ModelConfig, state: dict,
 # speculative decode: batched multi-token verify + cursor rollback + MTP draft
 # ---------------------------------------------------------------------------
 def apply_layer_verify(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
-                       rt: Runtime):
+                       rt: Runtime, depth=None, anc=None):
     """One layer of the speculative verify pass: like
     :func:`apply_layer_decode` but over ``x`` [B, T, d] (T = 1 + drafted
-    tokens per slot), appending T K/V rows at the per-slot cursor."""
+    tokens per slot), appending T K/V rows at the per-slot cursor.
+    ``depth``/``anc`` ([B, T] int32) switch the window to tree mode (see
+    :func:`attention.gqa_verify`)."""
     dmvm_dt = rt.dmvm_dtype or jnp.float32
     h = L.apply_norm(p["ln1"], x)
     if cfg.attn_type == "mla":
         mix, (c_q, c_s) = A.mla_verify(p["attn"], cfg, h, pos, cache["c_q"],
-                                       cache["c_s"], rt.backend, dmvm_dt)
+                                       cache["c_s"], rt.backend, dmvm_dt,
+                                       depth=depth, anc=anc)
         new_cache = {"c_q": c_q, "c_s": c_s}
     else:
         mix, (k_q, k_s, v_q, v_s) = A.gqa_verify(
             p["attn"], cfg, h, pos, cache["k_q"], cache["k_s"], cache["v_q"],
-            cache["v_s"], rt.backend, dmvm_dt)
+            cache["v_s"], rt.backend, dmvm_dt, depth=depth, anc=anc)
         new_cache = {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}
     x = x + mix
     if "moe" in p:
@@ -547,7 +550,8 @@ def apply_layer_verify(p: Params, cfg: ModelConfig, slot: int, x, pos, cache,
 
 
 def verify_step(p: Params, cfg: ModelConfig, state: dict, tokens: jax.Array,
-                rt: Runtime) -> tuple[jax.Array, jax.Array, dict]:
+                rt: Runtime, depth=None, anc=None,
+                ) -> tuple[jax.Array, jax.Array, dict]:
     """Speculative-decode verify: feed ``tokens`` [B, T] (per slot: the last
     committed token plus T-1 drafted tokens) at each slot's cursor in one
     batched pass.
@@ -563,6 +567,17 @@ def verify_step(p: Params, cfg: ModelConfig, state: dict, tokens: jax.Array,
     rows stay in the SLC region as dead entries that the position mask
     hides and the next in-place append overwrites (no erase cycle).
 
+    Tree mode (``depth``/``anc`` both [B, T] int32): ``tokens[:, i]`` is
+    node i of a per-slot draft *tree* in topological order (node 0 = root =
+    last committed token; ``anc[b, i]`` has bit j set iff node j is an
+    ancestor-or-self of node i).  Positions come from tree depth, masks
+    from ancestry, so row i's logits equal what sequential decode of node
+    i's root-path would produce — bit-exactly for chain-prefix nodes,
+    and up to float reduction order (~1 ulp) past a skipped sibling
+    (:func:`repro.models.attention.verify_attention_int8`).  The caller
+    walks the tree host-side and commits the longest accepted root-path
+    with :func:`tree_commit`.
+
     Attention-family stacks only: an SSM layer's recurrent state cannot be
     rewound without checkpointing, so SSM/hybrid engines keep the plain
     one-token decode loop.
@@ -575,7 +590,8 @@ def verify_step(p: Params, cfg: ModelConfig, state: dict, tokens: jax.Array,
     pos = jnp.broadcast_to(jnp.asarray(state["pos"], jnp.int32), (B,))
     x = p["embed"]["w"][tokens]
     if not cfg.rope_theta:
-        pp = pos[:, None] + jnp.arange(T)[None, :]
+        off = jnp.arange(T)[None, :] if depth is None else depth
+        pp = pos[:, None] + off
         x = x + _sinusoid_at(pp, cfg.d_model).astype(x.dtype)
     new_groups = []
     for (start, count, period), slots, caches in zip(
@@ -592,7 +608,8 @@ def verify_step(p: Params, cfg: ModelConfig, state: dict, tokens: jax.Array,
                                                            keepdims=False),
                     full_caches[s])
                 xx, nc = apply_layer_verify(slot_trees[s], cfg, start + s, xx,
-                                            pos, cache_s, rt)
+                                            pos, cache_s, rt,
+                                            depth=depth, anc=anc)
                 new_full.append(jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_slice_in_dim(
                         full, new[None].astype(full.dtype), idx, 0),
@@ -613,6 +630,40 @@ def rewind_pos(state: dict, pos) -> dict:
     so the rejected suffix needs no erase — its rows are dead (masked by
     ``pos``) until the next append overwrites them."""
     return {"groups": state["groups"], "pos": jnp.asarray(pos, jnp.int32)}
+
+
+def tree_commit(state: dict, base, sel, keep, pos) -> dict:
+    """Tree-spec commit: compact each slot's accepted root-path rows into
+    contiguous committed rows, then rewind the cursor — the tree sibling of
+    :func:`rewind_pos`.
+
+    ``base``/``keep``: [B] int32 (pre-window cursor, accepted path length);
+    ``sel``: [B, W] in-window node indices of the path in order.  Node
+    ``sel[b, w]``'s row (at ``base + sel[b, w]``, RoPE'd at its tree depth
+    ``base + 1 + w``) moves to row ``base + 1 + w`` — after the gather every
+    committed row sits at the position it was encoded at, the state
+    sequential decode would have built (the gather copies node K/V rows
+    verbatim; chain-prefix nodes are bit-identical to sequential appends,
+    nodes past a skipped sibling match up to float reduction order — see
+    :func:`verify_step`).  ``pos`` is the
+    [B] post-commit cursor (= base + 1 + keep for slots that ran a window,
+    unchanged elsewhere); rejected branches die in place per the SLC
+    write-in-place discipline."""
+    from repro.core import kvcache as KV
+    groups = jax.tree.map(lambda leaf: KV.path_gather(leaf, base, sel, keep),
+                          state["groups"])
+    return {"groups": groups, "pos": jnp.asarray(pos, jnp.int32)}
+
+
+def _mtp_cell(p: Params, cfg: ModelConfig, h, tok, pos_i, rt: Runtime):
+    """One MTP-head step: project ``[h; embed(tok)]`` through
+    ``mtp_proj``/``mtp_layer`` at position ``pos_i`` -> (logits, new h)."""
+    emb = p["embed"]["w"][tok].astype(h.dtype)                  # [B, d]
+    hcat = jnp.concatenate([h, emb], axis=-1)
+    hm = L.apply_linear(L._lin(p["mtp_proj"], "w"), hcat, rt.backend)
+    hm3, _ = apply_layer_train(p["mtp_layer"], cfg, cfg.n_layers - 1,
+                               hm[:, None, :], pos_i[:, None], rt)
+    return _lm_head(p, cfg, hm3[:, 0], rt), hm3[:, 0]
 
 
 def mtp_draft(p: Params, cfg: ModelConfig, hidden: jax.Array,
@@ -636,16 +687,51 @@ def mtp_draft(p: Params, cfg: ModelConfig, hidden: jax.Array,
     tok = jnp.asarray(token, jnp.int32)
     pos = jnp.asarray(pos, jnp.int32)
     for i in range(k):
-        emb = p["embed"]["w"][tok].astype(h.dtype)              # [B, d]
-        hcat = jnp.concatenate([h, emb], axis=-1)
-        hm = L.apply_linear(L._lin(p["mtp_proj"], "w"), hcat, rt.backend)
-        hm3, _ = apply_layer_train(p["mtp_layer"], cfg, cfg.n_layers - 1,
-                                   hm[:, None, :], (pos + i)[:, None], rt)
-        logits = _lm_head(p, cfg, hm3[:, 0], rt)
+        logits, h = _mtp_cell(p, cfg, h, tok, pos + i, rt)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         drafts.append(tok)
-        h = hm3[:, 0]
     return jnp.stack(drafts, axis=1)                            # [B, k]
+
+
+def mtp_chain_lengths(n: int, branch: int) -> list[int]:
+    """Per-chain node budgets for the MTP draft-tree beam: ``n`` draft
+    nodes split across ``min(branch, n)`` root-child chains, earlier
+    chains longer.  Shared by :func:`mtp_draft_tree` and the host-side
+    parent-pointer construction so both agree on the static topology."""
+    b = max(1, min(branch, n))
+    return [n // b + (1 if j < n % b else 0) for j in range(b)]
+
+
+def mtp_draft_tree(p: Params, cfg: ModelConfig, hidden: jax.Array,
+                   token: jax.Array, pos: jax.Array, n: int, branch: int,
+                   rt: Runtime) -> jax.Array:
+    """Beam the MTP head into a static draft tree: the top-``branch``
+    tokens of the head's first distribution each root a chain extended
+    greedily (each chain feeds its own token back through the recursive
+    head), with node budgets from :func:`mtp_chain_lengths`.
+
+    Returns tokens [B, n] in chain-major node order — chain j's nodes are
+    consecutive, first node a child of the root.  At ``branch=1`` this is
+    exactly :func:`mtp_draft` (one greedy chain).  The topology is static
+    per (n, branch), so the engine derives parent pointers host-side."""
+    if not cfg.mtp:
+        raise ValueError(f"{cfg.name} has no MTP head (cfg.mtp is False)")
+    lens = mtp_chain_lengths(n, branch)
+    h = hidden.astype(jnp.float32)
+    tok = jnp.asarray(token, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    logits0, h1 = _mtp_cell(p, cfg, h, tok, pos, rt)
+    _, top = jax.lax.top_k(logits0, len(lens))                  # [B, b]
+    drafts = []
+    for j, clen in enumerate(lens):
+        hj = h1
+        tj = top[:, j].astype(jnp.int32)
+        drafts.append(tj)
+        for s in range(1, clen):
+            lg, hj = _mtp_cell(p, cfg, hj, tj, pos + s, rt)
+            tj = jnp.argmax(lg, -1).astype(jnp.int32)
+            drafts.append(tj)
+    return jnp.stack(drafts, axis=1)                            # [B, n]
 
 
 def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:

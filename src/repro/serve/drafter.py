@@ -21,6 +21,16 @@ cheap and approximate.  Two flavours ship:
 ``draft(context, k) -> list[int]`` per request; "model" drafters expose
 ``draft_batch(params, hidden, token, pos) -> [n_slots, k]`` over the whole
 pool.
+
+Tree drafts (the ``spec_tree`` lane) are ``(tokens, parents)`` pairs in
+*draft space*: ``parents[i]`` is the index of node i's parent among the
+drafted nodes, or -1 for a child of the root (the last committed token —
+the engine holds window index 0 for it).  Parents are topological
+(``parents[i] < i``) and siblings carry distinct tokens, so the engine's
+accept walk is unambiguous.  Host drafters override :meth:`draft_tree`
+(the base class falls back to a linear chain of :meth:`draft`); the model
+drafter beams the MTP head into a static chain-major topology
+(:func:`repro.models.transformer.mtp_draft_tree`).
 """
 from __future__ import annotations
 
@@ -28,6 +38,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+
+
+def chain_parents(n: int) -> list[int]:
+    """Draft-space parents of a linear chain: [-1, 0, 1, ...]."""
+    return list(range(-1, n - 1))
+
+
+def tree_depths_ancestors(parents: list[int]) -> tuple[list[int], list[int]]:
+    """Window-space (depth, ancestor-bitmask) arrays for a draft tree.
+
+    ``parents`` is draft-space (see module docstring); the returned lists
+    have length ``len(parents) + 1`` and describe the *window*: entry 0 is
+    the root (depth 0, anc bit 0), entry i+1 is draft node i at window
+    index i+1 with bit i+1 OR'd onto its parent's mask — the operands
+    :func:`repro.models.transformer.verify_step` takes in tree mode.
+    """
+    depth = [0]
+    anc = [1]
+    for i, p in enumerate(parents):
+        if not -1 <= p < i:
+            raise ValueError(f"parents[{i}] = {p} is not topological")
+        w = i + 1
+        depth.append(depth[p + 1] + 1)
+        anc.append(anc[p + 1] | (1 << w))
+    return depth, anc
 
 
 class Drafter:
@@ -40,7 +75,17 @@ class Drafter:
     def draft(self, context: list[int], k: int) -> list[int]:
         raise NotImplementedError
 
+    def draft_tree(self, context: list[int], n: int,
+                   branch: int) -> tuple[list[int], list[int]]:
+        """(tokens, draft-space parents) with up to ``n`` nodes.  Default:
+        the linear draft as a single chain — any drafter works in the tree
+        lane unchanged; branching only raises acceptance."""
+        return self.draft(context, n), chain_parents(n)
+
     def draft_batch(self, params, hidden, token, pos):
+        raise NotImplementedError
+
+    def draft_tree_batch(self, params, hidden, token, pos):
         raise NotImplementedError
 
 
@@ -68,33 +113,97 @@ class NGramDrafter(Drafter):
                         return (cont + [cont[-1]] * k)[:k]
         return [context[-1]] * k
 
+    def _candidates(self, context: list[int], k: int,
+                    branch: int) -> list[list[int]]:
+        """Up to ``branch`` candidate continuations with distinct first
+        tokens, in the same longest-n / most-recent-match preference order
+        :meth:`draft` uses (so candidate 0 IS the linear draft's choice)."""
+        L = len(context)
+        out: list[list[int]] = []
+        seen: set[int] = set()
+        for n in range(min(self.max_n, L - 1), 0, -1):
+            pat = context[-n:]
+            for i in range(L - n - 1, -1, -1):
+                if context[i:i + n] == pat:
+                    cont = context[i + n:i + n + k]
+                    if cont and cont[0] not in seen:
+                        seen.add(cont[0])
+                        out.append(cont)
+                        if len(out) >= branch:
+                            return out
+        return out
+
+    def draft_tree(self, context: list[int], n: int,
+                   branch: int) -> tuple[list[int], list[int]]:
+        """Branch on the top candidate continuations: the best match keeps
+        a chain of the remaining budget (identical to the linear draft),
+        and each runner-up (distinct first token) hangs one node off the
+        root — covering the most likely divergence point, the first
+        drafted token."""
+        cands = self._candidates(context, n, max(1, branch))
+        if not cands:
+            return [context[-1]] * n, chain_parents(n)
+        extras = cands[1:n]                     # keep >= 1 node for the chain
+        main_len = n - len(extras)
+        main = (cands[0] + [cands[0][-1]] * n)[:main_len]
+        toks = list(main)
+        parents = chain_parents(main_len)
+        for c in extras:
+            toks.append(c[0])
+            parents.append(-1)
+        return toks, parents
+
 
 class MTPDrafter(Drafter):
     """Batched MTP-head drafting over the slot pool.  ``hidden`` is the
     post-``ln_f`` hidden at each slot's last committed position (zeros
-    right after prefill — the head free-runs from the embedding there)."""
+    right after prefill — the head free-runs from the embedding there).
+    With ``tree_branch`` set, :meth:`draft_tree_batch` beams the head
+    instead: top-``branch`` first tokens each root a greedy chain
+    (static chain-major topology exposed as :attr:`tree_parents`)."""
 
     name = "mtp"
     kind = "model"
 
-    def __init__(self, cfg: ModelConfig, rt, k: int):
+    def __init__(self, cfg: ModelConfig, rt, k: int,
+                 tree_branch: int | None = None):
         if not cfg.mtp:
             raise ValueError(
                 f"{cfg.name} has no MTP head (cfg.mtp is False); "
                 "use the ngram drafter")
         from repro.models import model as M
+        from repro.models import transformer as T
         self._fn = jax.jit(
             lambda p, h, t, pos: M.mtp_draft(p, cfg, h, t, pos, k, rt))
+        self.tree_parents: list[int] | None = None
+        if tree_branch is not None:
+            self._tree_fn = jax.jit(
+                lambda p, h, t, pos: M.mtp_draft_tree(p, cfg, h, t, pos, k,
+                                                      tree_branch, rt))
+            parents = []
+            for clen in T.mtp_chain_lengths(k, tree_branch):
+                prev = -1
+                for _ in range(clen):
+                    parents.append(prev)
+                    prev = len(parents) - 1
+            self.tree_parents = parents
 
     def draft_batch(self, params, hidden, token, pos):
         return self._fn(params, jnp.asarray(hidden),
                         jnp.asarray(token, jnp.int32),
                         jnp.asarray(pos, jnp.int32))
 
+    def draft_tree_batch(self, params, hidden, token, pos):
+        return self._tree_fn(params, jnp.asarray(hidden),
+                             jnp.asarray(token, jnp.int32),
+                             jnp.asarray(pos, jnp.int32))
+
 
 def make_drafter(spec: "str | Drafter | None", cfg: ModelConfig, rt,
-                 k: int) -> Drafter:
-    """``"ngram" | "ngram:N" (max n-gram) | "mtp"`` or a built instance."""
+                 k: int, tree_branch: int | None = None) -> Drafter:
+    """``"ngram" | "ngram:N" (max n-gram) | "mtp"`` or a built instance.
+    ``tree_branch`` (engine's ``spec_branch``, tree lane only) pre-builds
+    the model drafter's beam topology."""
     if spec is None:
         return NGramDrafter()
     if isinstance(spec, Drafter):
@@ -103,5 +212,5 @@ def make_drafter(spec: "str | Drafter | None", cfg: ModelConfig, rt,
     if name == "ngram":
         return NGramDrafter(max_n=int(arg)) if arg else NGramDrafter()
     if name == "mtp":
-        return MTPDrafter(cfg, rt, k)
+        return MTPDrafter(cfg, rt, k, tree_branch=tree_branch)
     raise ValueError(f"unknown drafter {spec!r}; one of ['ngram', 'mtp']")

@@ -46,6 +46,16 @@ read cost by the acceptance rate.  Greedy speculative output is
 token-identical to the plain engine (the verify logits are bit-identical
 to sequential decode), and sampled requests stay stream-exact: one RNG
 draw per emitted token, acceptance = "draft equals the sampled token".
+
+With ``spec_tree=n`` the lane drafts a *token tree* instead of a chain
+(``spec_branch`` controls the drafter's branching): the verify window
+carries per-row depths and int32 ancestor bitmasks so the causal mask
+becomes an ancestor mask, the host walks the verified tree for the
+longest accepted root-path, and ``tree_commit`` compacts the accepted
+path's scattered K/V rows into contiguous committed rows before the
+cursor lands past them.  Same draft budget, higher acceptance — a chain
+only survives while every draft matches, a tree survives any drafted
+sibling matching.  ``spec_tree`` takes precedence over ``spec_k``.
 """
 from __future__ import annotations
 
@@ -59,10 +69,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
+from repro.core import kvcache as KV
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.transformer import Runtime
-from repro.serve.drafter import Drafter, make_drafter
+from repro.serve.drafter import (Drafter, chain_parents, make_drafter,
+                                 tree_depths_ancestors)
 from repro.serve.quantize import quantize_tree
 from repro.serve.scheduler import (Request, RequestState, Scheduler,
                                    SchedulingPolicy)
@@ -210,6 +222,8 @@ class ContinuousBatchingEngine:
                  chunk: int | None = None,
                  max_step_tokens: int | None = None,
                  spec_k: int = 0,
+                 spec_tree: int = 0,
+                 spec_branch: int = 2,
                  drafter: str | Drafter | None = "ngram",
                  multi_step: int = 1,
                  topk_preselect: bool = True,
@@ -234,9 +248,20 @@ class ContinuousBatchingEngine:
             raise ValueError("chunk must be >= 1")
         if spec_k < 0:
             raise ValueError("spec_k must be >= 0 (0 = no speculation)")
+        if spec_tree < 0:
+            raise ValueError("spec_tree must be >= 0 (0 = no tree drafts)")
+        if spec_tree > 30:
+            # the ancestor bitmask is one int32 per window row: node w owns
+            # bit w, the root owns bit 0, so spec_tree drafted nodes need
+            # bits 1..spec_tree — bit 31 (the sign bit) stays unused
+            raise ValueError("spec_tree must be <= 30 (int32 ancestor mask)")
+        if spec_branch < 1:
+            raise ValueError("spec_branch must be >= 1")
         # SSM/hybrid recurrent state cannot rewind: like `chunk`, the spec
-        # lane silently falls back to the exact one-token decode there
+        # lanes silently fall back to the exact one-token decode there
         self.spec_k = 0 if self._has_ssm else int(spec_k)
+        self.spec_tree = 0 if self._has_ssm else int(spec_tree)
+        self.spec_branch = int(spec_branch)
         if multi_step < 1:
             raise ValueError("multi_step must be >= 1 (1 = per-token loop)")
         # fused multi-step decode also leans on the cursor rewind to unwind
@@ -271,10 +296,12 @@ class ContinuousBatchingEngine:
                       else n_slots * max_len)
             self._pcache = RadixPrefixCache(budget)
             self.scheduler.attach_prefix_cache(self._pcache)
-        # the pool keeps headroom rows past max_len so neither a verify
-        # window nor a fused multi-step block starting at the last live
-        # position ever clamp-wraps its in-place appends onto valid rows
-        self._state_len = max_len + max(self.spec_k, self.multi_step - 1)
+        # the pool keeps headroom rows past max_len so no lane's in-place
+        # appends starting at the last live position ever clamp-wrap onto
+        # valid rows — the audited rule lives in kvcache.pool_headroom
+        self._state_len = max_len + KV.pool_headroom(
+            spec_k=self.spec_k, spec_tree=self.spec_tree,
+            multi_step=self.multi_step)
         self.state = M.init_decode_state(cfg, n_slots, self._state_len)
         self._last_tok = np.zeros((n_slots,), np.int32)
         self._slot_pos = np.zeros((n_slots,), np.int64)   # host cursor mirror
@@ -300,6 +327,12 @@ class ContinuousBatchingEngine:
             # schemas stay backward-compatible (absent, not null, when off)
             self.stats.update({"prefix_hits": 0, "cached_tokens": 0,
                                "prefill_tokens_saved": 0})
+        if self.spec_k or self.spec_tree:
+            # per-window accepted-length histogram: index = drafted tokens
+            # committed by one verify pass (0 .. draft budget), list-valued
+            # so it rides the same stats dict as the scalar counters
+            w = self.spec_tree if self.spec_tree else self.spec_k
+            self.stats["spec_accept_hist"] = [0] * (w + 1)
 
         # every serve-path step donates its decode-state / carry argument:
         # the [layers, n_slots, S, H, D] int8 K/V pool (and the chunked
@@ -330,13 +363,25 @@ class ContinuousBatchingEngine:
             self._warm_carry = jax.jit(
                 lambda s, slot, n: M.warm_prefill_carry(
                     cfg, s, slot, n, max_len + self.chunk))
-        if self.spec_k:
-            self._drafter = make_drafter(drafter, cfg, self.rt, self.spec_k)
+        if self.spec_k or self.spec_tree:
+            # the tree lane takes precedence over the linear lane, so the
+            # drafter's budget is whichever window actually runs
+            k_draft = self.spec_tree if self.spec_tree else self.spec_k
+            self._drafter = make_drafter(
+                drafter, cfg, self.rt, k_draft,
+                tree_branch=self.spec_branch if self.spec_tree else None)
             self._h_last = (np.zeros((n_slots, cfg.d_model), np.float32)
                             if self._drafter.kind == "model" else None)
+        if self.spec_k and not self.spec_tree:
             self._verify = jax.jit(
                 lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt),
                 donate_argnums=(1,))
+        if self.spec_tree:
+            self._verify_tree = jax.jit(
+                lambda p, s, t, dep, a: M.verify_step(
+                    p, cfg, s, t, self.rt, depth=dep, anc=a),
+                donate_argnums=(1,))
+            self._tree_commit = jax.jit(M.tree_commit, donate_argnums=(0,))
         if self.multi_step > 1:
             self._multi = jax.jit(
                 lambda p, s, t: M.multi_decode_step(
@@ -382,16 +427,35 @@ class ContinuousBatchingEngine:
                     p, cfg, s, t, self.multi_step, self.rt),
                 in_shardings=(qsh, ssh, self._io["tokens"]),
                 out_shardings=(self._io["block"], ssh), donate_argnums=(1,))
-        if self.spec_k:
-            # the verify step's I/O pins beside the pool so the spec lane
-            # never migrates the SLC rows (same rule as the decode step)
+        if self.spec_k or self.spec_tree:
+            # the verify step's I/O pins beside the pool so the spec lanes
+            # never migrate the SLC rows (same rule as the decode step)
             vsh = SH.verify_shardings(self.n_slots, mesh)
             self._io["verify_tokens"] = vsh["tokens"]
+        if self.spec_k and not self.spec_tree:
             self._verify = jax.jit(
                 lambda p, s, t: M.verify_step(p, cfg, s, t, self.rt),
                 in_shardings=(qsh, ssh, vsh["tokens"]),
                 out_shardings=(vsh["logits"], vsh["hidden"], ssh),
                 donate_argnums=(1,))
+        if self.spec_tree:
+            # the [B, T] depth/anc window operands shard their slot axis
+            # beside the draft tokens; the commit scalars replicate (they
+            # feed per-slot dynamic slicing inside the jitted path gather)
+            tsh = SH.tree_verify_shardings(self.n_slots, mesh)
+            self._io["tree_window"] = tsh["window"]
+            self._io["tree_commit"] = tsh["commit"]
+            self._verify_tree = jax.jit(
+                lambda p, s, t, dep, a: M.verify_step(
+                    p, cfg, s, t, self.rt, depth=dep, anc=a),
+                in_shardings=(qsh, ssh, vsh["tokens"], tsh["window"],
+                              tsh["window"]),
+                out_shardings=(vsh["logits"], vsh["hidden"], ssh),
+                donate_argnums=(1,))
+            self._tree_commit = jax.jit(
+                M.tree_commit,
+                in_shardings=(ssh,) + (tsh["commit"],) * 4,
+                out_shardings=ssh, donate_argnums=(0,))
         # admissions write a replicated B=1 row into the sharded pool; the
         # out_shardings pin keeps the pool resident (no migration per admit)
         self._write = jax.jit(T.write_slot, out_shardings=ssh,
@@ -646,7 +710,7 @@ class ContinuousBatchingEngine:
         # host mirror of the slot cursor (the spec lane's rollback base):
         # after prefill the cache holds exactly the prompt
         self._slot_pos[req.slot] = req.prompt_len
-        if self.spec_k and self._h_last is not None:
+        if (self.spec_k or self.spec_tree) and self._h_last is not None:
             self._h_last[req.slot] = 0.0      # MTP head free-runs post-prefill
         if req.replay_pos >= len(req.output) and req.should_stop():
             self._retire(req, self._now())            # budget of 1 token
@@ -879,6 +943,9 @@ class ContinuousBatchingEngine:
         if not dec:
             return step_pf > 0 or cancelled
         self.stats["decode_steps"] += 1
+        if self.spec_tree:
+            self._spec_tree_decode(dec)
+            return True
         if self.spec_k:
             self._spec_decode(dec)
             return True
@@ -972,6 +1039,39 @@ class ContinuousBatchingEngine:
             self.state = T.rewind_pos(self.state, self._pos_device())
 
     # -- speculative decode lane -------------------------------------------
+    def _row_token_fn(self, logits, dec: list[tuple[int, Request]]):
+        """Fetch the verify logits under the decode-lane transfer
+        discipline and return a ``(req, slot, i) -> int`` row sampler.
+
+        The fetch shrinks exactly like :meth:`_next_tokens`: all-greedy
+        pools argmax on device and ship [B, T] ints; bounded-top-k sampled
+        pools ship [B, T, kmax] values+indices; only unbounded sampling
+        falls back to the full [B, T, V] rows.  The returned sampler emits
+        (or discards, for replay-stream alignment) the token the model
+        chose at verify row ``i`` — identical across the three shapes."""
+        rows = greedy_tok = vals_h = idx_h = None
+        if all(req.temperature <= 0 for _, req in dec):
+            greedy_tok = self._fetch(jnp.argmax(logits, -1), decode=True)
+        else:
+            ks = [req.top_k for _, req in dec if req.temperature > 0]
+            if self.topk_preselect and all(
+                    kk is not None and kk < self.cfg.vocab_size for kk in ks):
+                kmax = max(ks)
+                vals_h, idx_h = self._fetch(
+                    self._device_topk(logits, kmax), decode=True)
+            else:
+                rows = self._fetch(logits, decode=True).astype(np.float32)
+
+        def row_token(req: Request, slot: int, i: int) -> int:
+            if greedy_tok is not None:
+                return int(greedy_tok[slot, i])
+            if rows is not None:
+                return self._sample_token(req, rows[slot, i])
+            return self._sample_candidates(req, vals_h[slot, i],
+                                           idx_h[slot, i])
+
+        return row_token
+
     def _draft_for(self, req: Request, dr) -> list[int]:
         """k draft tokens for one slot.  A replaying (preempt-resumed)
         request drafts its own recorded tokens — perfect drafts, so replay
@@ -1016,34 +1116,7 @@ class ContinuousBatchingEngine:
             self._push(toks, self._io and self._io["verify_tokens"],
                        decode=True))
         self.stats["verify_steps"] += 1
-        rows = greedy_tok = vals_h = idx_h = None
-        if all(req.temperature <= 0 for _, req in dec):
-            # all-greedy: argmax on device, ship [B, T] ints instead of the
-            # full [B, T, V] logits (same fast path as _next_tokens)
-            greedy_tok = self._fetch(jnp.argmax(logits, -1), decode=True)
-        else:
-            ks = [req.top_k for _, req in dec if req.temperature > 0]
-            if self.topk_preselect and all(
-                    kk is not None and kk < self.cfg.vocab_size for kk in ks):
-                # sampled verify fetch shrinks the same way as the decode
-                # lane: [B, T, kmax] values+indices instead of full vocab
-                kmax = max(ks)
-                vals_h, idx_h = self._fetch(
-                    self._device_topk(logits, kmax), decode=True)
-            else:
-                rows = self._fetch(logits, decode=True).astype(np.float32)
-
-        def row_token(req: Request, slot: int, i: int) -> int:
-            """Emit (or discard, for replay-stream alignment) the token the
-            model chose at verify row i — identical across the three fetch
-            shapes (device argmax ints / top-k candidates / full rows)."""
-            if greedy_tok is not None:
-                return int(greedy_tok[slot, i])
-            if rows is not None:
-                return self._sample_token(req, rows[slot, i])
-            return self._sample_candidates(req, vals_h[slot, i],
-                                           idx_h[slot, i])
-
+        row_token = self._row_token_fn(logits, dec)
         hid = (self._fetch(hidden, decode=True).astype(np.float32)
                if self._drafter.kind == "model" else None)
         now = self._now()
@@ -1082,10 +1155,147 @@ class ContinuousBatchingEngine:
                 if not accepted:
                     break
                 committed += 1
+            self.stats["spec_accept_hist"][committed] += 1
             self._slot_pos[slot] += 1 + committed
         # rollback: rewind every cursor to its committed prefix; rejected
         # suffix rows stay as dead in-place entries until overwritten
         self.state = T.rewind_pos(self.state, self._pos_device())
+
+    # -- tree-draft speculative decode lane ---------------------------------
+    def _tree_draft_for(self, req: Request, dr) -> tuple[list[int], list[int]]:
+        """(tokens, draft-space parents) for one slot's tree window.
+
+        A replaying (preempt-resumed) request drafts its recorded tokens as
+        a linear chain — perfect drafts, so replay advances ``spec_tree + 1``
+        positions per window and stays token-identical; the tail past the
+        recorded output comes from the drafter (the model drafter's
+        chain-0 prefix, or a fresh host chain draft).  Fresh requests get
+        the drafter's tree proper."""
+        n = self.spec_tree
+        rec = list(req.output[req.replay_pos:req.replay_pos + n])
+        if not rec:
+            if self._drafter.kind == "model":
+                return ([int(t) for t in dr[req.slot]],
+                        list(self._drafter.tree_parents))
+            ctx = req.prompt + req.output
+            return self._drafter.draft_tree(ctx, n, self.spec_branch)
+        if len(rec) < n:
+            if self._drafter.kind == "model":
+                rec += [int(t) for t in dr[req.slot, :n - len(rec)]]
+            else:
+                ctx = req.prompt + req.output[:req.replay_pos] + rec
+                rec += self._drafter.draft(ctx, n - len(rec))
+        return rec, chain_parents(n)
+
+    def _spec_tree_decode(self, dec: list[tuple[int, Request]]) -> None:
+        """One tree-verify pass over the decode pool: feed [root = last
+        committed token, ``spec_tree`` tree-drafted nodes] per slot with
+        per-row depths and ancestor bitmasks, walk the verified tree
+        host-side for the longest accepted root-path, then compact the
+        accepted path's scattered K/V rows into contiguous committed rows
+        (``tree_commit``) — the rejected branches die in place, exactly
+        like the linear lane's rewound suffix."""
+        n = self.spec_tree
+        Tw = n + 1
+        toks = np.zeros((self.n_slots, Tw), np.int32)
+        toks[:, 0] = self._last_tok
+        # every batched row needs a valid topology — inactive slots verify
+        # a dummy chain whose garbage K/V rows the commit masks (keep=0)
+        depth = np.tile(np.arange(Tw, dtype=np.int32), (self.n_slots, 1))
+        anc = np.tile(((1 << (np.arange(Tw) + 1)) - 1).astype(np.int32),
+                      (self.n_slots, 1))
+        dr = None
+        if self._drafter.kind == "model":
+            rep = self._io and self._io["pos"]     # replicated on the mesh
+            dr = self._fetch(self._dev(
+                self._drafter.draft_tree_batch, self.qparams,
+                self._push(self._h_last, rep, decode=True),
+                self._push(self._last_tok, rep, decode=True),
+                self._push(np.asarray(self._slot_pos, np.int32), rep,
+                           decode=True)), decode=True)
+        drafts: dict[int, list[int]] = {}
+        parents: dict[int, list[int]] = {}
+        for slot, req in dec:
+            d_toks, d_par = self._tree_draft_for(req, dr)
+            drafts[slot], parents[slot] = d_toks, d_par
+            toks[slot, 1:] = d_toks
+            dep, an = tree_depths_ancestors(d_par)
+            depth[slot], anc[slot] = dep, an
+        wsh = self._io and self._io["tree_window"]
+        logits, hidden, self.state = self._dev(
+            self._verify_tree, self.qparams, self.state,
+            self._push(toks, self._io and self._io["verify_tokens"],
+                       decode=True),
+            self._push(depth, wsh, decode=True),
+            self._push(anc, wsh, decode=True))
+        self.stats["verify_steps"] += 1
+        row_token = self._row_token_fn(logits, dec)
+        hid = (self._fetch(hidden, decode=True).astype(np.float32)
+               if self._drafter.kind == "model" else None)
+        # the commit's rollback base: each slot's cursor BEFORE this window
+        # (window node w's K/V row sits at base + w)
+        base = np.asarray(self._slot_pos, np.int32)
+        sel = np.zeros((self.n_slots, n), np.int32)
+        keep = np.zeros((self.n_slots,), np.int32)
+        now = self._now()
+        for slot, req in dec:
+            # children of each window node in draft order; the walk is
+            # unambiguous because siblings carry distinct tokens
+            kids: dict[int, list[int]] = {}
+            for i, p in enumerate(parents[slot]):
+                kids.setdefault(p + 1, []).append(i + 1)
+            cur = 0                        # window node whose row we sample
+            path: list[int] = []           # accepted nodes, root-path order
+            while True:
+                # row `cur` is the model's next-token distribution after
+                # consuming the root plus cur's ancestor chain — valid
+                # because reaching cur means that whole chain was accepted
+                replaying = req.replay_pos < len(req.output)
+                if replaying:
+                    # the draw still runs (discarded) so a resumed sampled
+                    # request re-consumes one draw per recorded token and
+                    # its stream stays aligned — same rule as _next_tokens
+                    if req.temperature > 0:
+                        row_token(req, slot, cur)
+                    tok = req.output[req.replay_pos]
+                    req.replay_pos += 1
+                else:
+                    tok = row_token(req, slot, cur)
+                    req.output.append(tok)
+                    req.replay_pos = len(req.output)
+                    self.policy.on_tokens(req, 1)
+                self._last_tok[slot] = tok
+                if hid is not None:
+                    self._h_last[slot] = hid[slot, cur]
+                nxt = next((c for c in kids.get(cur, ())
+                            if int(toks[slot, c]) == tok), None)
+                if not replaying and kids.get(cur):
+                    self.stats["spec_drafted"] += 1
+                    self.stats["spec_accepted"] += int(nxt is not None)
+                if req.replay_pos >= len(req.output) and req.should_stop():
+                    if nxt is not None:    # the stopping token was drafted:
+                        path.append(nxt)   # commit its row like the linear
+                    self._retire(req, now)         # lane's bonus accept
+                    break
+                if nxt is None:
+                    break
+                path.append(nxt)
+                cur = nxt
+            committed = len(path)
+            sel[slot, :committed] = path
+            keep[slot] = committed
+            self.stats["spec_accept_hist"][committed] += 1
+            self._slot_pos[slot] += 1 + committed
+        # compact: gather each slot's accepted rows (base + sel) into
+        # contiguous committed rows at base + 1 and land the new cursors;
+        # inactive slots pass keep=0 and their unchanged cursor (no-op)
+        csh = self._io and self._io["tree_commit"]
+        self.state = self._dev(
+            self._tree_commit, self.state,
+            self._push(base, csh, decode=True),
+            self._push(sel, csh, decode=True),
+            self._push(keep, csh, decode=True),
+            self._pos_device())
 
     def _pos_device(self):
         return self._push(np.asarray(self._slot_pos, np.int32),

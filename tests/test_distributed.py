@@ -360,6 +360,50 @@ class TestShardedServe:
         """)
         assert out.count("SPEC_PARITY_OK") == 2
 
+    def test_sharded_tree_spec_decode_token_identical(self):
+        """The tree-draft spec lane over the 2x4 mesh must match the
+        single-device non-speculative engine token-for-token: the [B, T]
+        depth/anc window operands pin beside the draft tokens
+        (dist.sharding.tree_verify_shardings) and the accepted-path
+        compaction (tree_commit) takes the pool in and out at its own
+        shardings with replicated scalar operands — the donation-alias
+        condition.  Covers the branching ngram drafter on dense GQA (with
+        fair-share preemption riding the lane) and the beamed MTP drafter
+        on DeepSeek (MLA + MoE + cfg.mtp)."""
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            for arch, quantize, drafter, policy in (
+                    ("llama3-8b", True, "ngram", "fair:3"),
+                    ("deepseek-v3-671b", False, "mtp", "sjf")):
+                cfg = ARCHS[arch].reduced()
+                params = M.init_params(jax.random.key(0), cfg)
+                rng = np.random.default_rng(13)
+                prompts = [rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 13)).tolist()
+                           for _ in range(6)]
+                budgets = [int(rng.integers(2, 9)) for _ in range(6)]
+                ref = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32,
+                    quantize=quantize).generate_all(prompts, budgets)
+                mesh = jax.make_mesh((2, 4), ("data", "model"))
+                rt = Runtime(mesh=mesh, data_axes=("data",),
+                             serve_resident_moe=True)
+                eng = ContinuousBatchingEngine(
+                    cfg, params, n_slots=4, max_len=32, quantize=quantize,
+                    chunk=4, policy=policy, spec_tree=4, spec_branch=2,
+                    drafter=drafter, rt=rt)
+                got = eng.generate_all(prompts, budgets)
+                assert got == ref, (arch, got, ref)
+                assert eng.stats["verify_steps"] > 0
+                print("TREE_PARITY_OK", arch,
+                      "hist=%s" % eng.stats["spec_accept_hist"])
+        """)
+        assert out.count("TREE_PARITY_OK") == 2
+
     def test_sharded_multi_step_token_identical(self):
         """The fused multi-step lane over the mesh must match the
         single-device *single-step* engine token-for-token: the fused

@@ -198,3 +198,92 @@ class TestVerifyAttn:
             o2 = da_ops.verify_attention(q, k_q2, k_s, v_q2, v_s, pos)
             np.testing.assert_allclose(np.asarray(o1[:, qt]),
                                        np.asarray(o2[:, qt]), rtol=1e-6)
+
+
+def _chain_anc(b, t):
+    """Linear-chain ancestor masks: node i's ancestors are 0..i."""
+    row = (1 << (np.arange(t, dtype=np.int64) + 1)) - 1
+    return jnp.asarray(np.tile(row.astype(np.int32), (b, 1)))
+
+
+def _tree_anc(parents):
+    """Ancestor bitmasks from a parent-pointer list (parents[0] == -1)."""
+    anc = np.zeros(len(parents), np.int64)
+    for i, p in enumerate(parents):
+        anc[i] = (anc[p] if p >= 0 else 0) | (1 << i)
+    return jnp.asarray(anc.astype(np.int32)[None, :])
+
+
+class TestVerifyTreeAttn:
+    """Tree-verify kernel: the stepped limit becomes a per-row ancestor
+    bitmask over the in-window nodes."""
+
+    @pytest.mark.parametrize("b,s,g,rep,d,t", [
+        (2, 256, 2, 2, 64, 4),
+        (1, 300, 4, 1, 64, 7),        # non-aligned seq
+        (3, 512, 1, 4, 128, 5),
+        (2, 128, 2, 2, 64, 1),        # root-only window
+    ])
+    def test_matches_oracle(self, b, s, g, rep, d, t):
+        k1, k2, k3 = jax.random.split(jax.random.key(b * s + g + d + t), 3)
+        q = jax.random.normal(k1, (b, t, g * rep, d))
+        k = jax.random.normal(k2, (b, s, g, d))
+        v = jax.random.normal(k3, (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.asarray(np.arange(b) * 7 + s // 2, jnp.int32)
+        # per-slot random trees (parents[i] < i), seeded by the shape
+        rng = np.random.RandomState(b * s + t)
+        anc = np.zeros((b, t), np.int64)
+        for bb in range(b):
+            par = [-1] + [rng.randint(0, i) for i in range(1, t)]
+            anc[bb] = np.asarray(_tree_anc(par))[0]
+        anc = jnp.asarray(anc.astype(np.int32))
+        want = da_ref.verify_tree_ref(q, k_q, k_s, v_q, v_s, pos, anc)
+        got = da_ops.verify_attention_tree(q, k_q, k_s, v_q, v_s, pos, anc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-6)
+
+    def test_chain_tree_equals_linear_verify(self):
+        """A linear-chain ancestor mask reproduces the stepped verify
+        kernel bit-for-bit (masked scores are identical)."""
+        b, s, g, d, t = 2, 256, 2, 64, 4
+        q = jax.random.normal(jax.random.key(12), (b, t, g, d))
+        k = jax.random.normal(jax.random.key(13), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(14), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.array([30, 100], jnp.int32)
+        a = da_ops.verify_attention(q, k_q, k_s, v_q, v_s, pos)
+        b_ = da_ops.verify_attention_tree(q, k_q, k_s, v_q, v_s, pos,
+                                          _chain_anc(b, t))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_non_ancestor_rows_masked(self):
+        """Poisoning the K/V rows of non-ancestor nodes (siblings and the
+        uncommitted tail) must not change a node's output."""
+        b, s, g, d = 1, 128, 2, 64
+        # root -> {1, 2}; 1 -> 3; 2 -> 4   (two branches of depth 2)
+        parents = [-1, 0, 0, 1, 2]
+        t = len(parents)
+        anc = _tree_anc(parents)
+        q = jax.random.normal(jax.random.key(15), (b, t, g, d))
+        k = jax.random.normal(jax.random.key(16), (b, s, g, d))
+        v = jax.random.normal(jax.random.key(17), (b, s, g, d))
+        k_q, k_s = quant.quantize_kv(k)
+        v_q, v_s = quant.quantize_kv(v)
+        pos = jnp.array([40], jnp.int32)
+        o1 = da_ops.verify_attention_tree(q, k_q, k_s, v_q, v_s, pos, anc)
+        for node in range(t):
+            a = int(np.asarray(anc)[0, node])
+            dead = [j for j in range(t) if not (a >> j) & 1]
+            k_q2, v_q2 = k_q, v_q
+            for j in dead:
+                k_q2 = k_q2.at[:, 40 + j].set(127)
+                v_q2 = v_q2.at[:, 40 + j].set(-127)
+            k_q2 = k_q2.at[:, 40 + t:].set(127)   # uncommitted tail too
+            v_q2 = v_q2.at[:, 40 + t:].set(-127)
+            o2 = da_ops.verify_attention_tree(q, k_q2, k_s, v_q2, v_s,
+                                              pos, anc)
+            np.testing.assert_allclose(np.asarray(o1[:, node]),
+                                       np.asarray(o2[:, node]), rtol=1e-6)

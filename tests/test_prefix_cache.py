@@ -289,6 +289,18 @@ class TestWarmColdParity:
         assert warm.stats["prefix_hits"] > 0
         _assert_slots_consistent(warm)
 
+    def test_tree_spec_decode_lane(self, llama):
+        """Warm admission under the tree-spec lane: a cached prefix feeds a
+        verify window whose rows are tree nodes; accepted-path compaction
+        keeps committed rows contiguous, so publish caps stay valid."""
+        cfg, params = llama
+        prompts = _shared_prompts(cfg)
+        ref = _engine(cfg, params, spec_tree=4).generate_all(prompts, [6] * 4)
+        warm = _engine(cfg, params, spec_tree=4, prefix_cache=True)
+        assert warm.generate_all(prompts, [6] * 4) == ref
+        assert warm.stats["prefix_hits"] > 0
+        _assert_slots_consistent(warm)
+
     def test_multi_step_lane(self, llama):
         cfg, params = llama
         prompts = _shared_prompts(cfg)
