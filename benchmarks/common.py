@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: CSV emission + wall-time measurement."""
+"""Shared benchmark helpers: CSV emission, wall-time measurement, and the
+warm-engine stats reset the serving benchmarks share."""
 from __future__ import annotations
 
 import time
@@ -6,6 +7,19 @@ import time
 import jax
 
 ROWS: list[tuple] = []
+
+
+def reset_engine_stats(eng) -> None:
+    """Zero a warmed serve engine back to a measurable baseline: flush the
+    prefix-cache trie (every slot back on the free heap) and its counters,
+    then reset ``eng.stats`` — list-valued stats (the spec accepted-length
+    histogram) re-zero in place at their length, scalars to 0."""
+    if eng._pcache is not None:
+        eng._pcache.clear()
+        for k in eng._pcache.stats:
+            eng._pcache.stats[k] = 0
+    for k, v in eng.stats.items():
+        eng.stats[k] = [0] * len(v) if isinstance(v, list) else 0
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -1,0 +1,213 @@
+"""Tiered-KV swap benchmark: swap-based vs recompute-based preemption.
+
+One smoke trace — a burst of chunked-prefill requests over a small slot
+pool under a preemptive fair-share policy, so residents get bumped every
+``quantum`` generated tokens while less-served users wait — replayed on
+two otherwise identical engines:
+
+* **recompute** — the baseline preemption: a victim's slot is freed and
+  re-admission re-prefills the prompt and replays the kept tokens.
+* **swap** — the tiered pool (``--kv-swap``): the victim's committed rows
+  move to the metered cold tier and re-admission restores them, skipping
+  the whole re-prefill + replay.
+
+Both runs must emit identical tokens (swap restores are byte-exact), and
+the swap run must win the two latencies preemption actually hits:
+
+* **resume TTFT** — preemption to the victim's next emitted token.  The
+  recompute victim pays queue wait + full re-prefill + replay of every
+  kept token; the swap victim pays queue wait + one restore write + one
+  decode step.  Observed per preemption from the step loop (no engine
+  instrumentation): the timestamp where ``n_preemptions`` ticks up, to
+  the timestamp where that request's output next grows.
+* **TPOT** — first token to finish per generated token; the victim's
+  replay decode steps are pure overhead the swap run never runs.
+
+The script exits non-zero unless parity and both wins hold — it is a
+regression gate, not just a reporter.
+
+    PYTHONPATH=src python benchmarks/kv_swap_bench.py --json BENCH_kv_swap.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+
+try:                                   # invoked as benchmarks/<script>.py
+    from common import reset_engine_stats
+except ImportError:                    # imported as a benchmarks.* module
+    from benchmarks.common import reset_engine_stats
+
+
+def make_engine(cfg, params, args, kv_swap: bool):
+    max_len = args.prompt_len + args.budget + 1
+    return ContinuousBatchingEngine(
+        cfg, params, n_slots=args.slots, max_len=max_len,
+        policy=f"fair:{args.quantum}", chunk=args.chunk,
+        kv_swap=kv_swap,
+        # every queued victim may hold a pinned cold block at once, so the
+        # tier budget scales with the trace depth, not the slot count
+        cold_rows=(args.cold_rows if args.cold_rows is not None
+                   else args.requests * max_len))
+
+
+def warm_engine(eng, args):
+    """Compile every jit the measured run touches: chunk/finalize/decode
+    via a tiny generation, plus — on the swap engine — one off-trace swap
+    round trip for the row lift (read_slot) and the restore write."""
+    eng.generate_all([list(range(1, args.chunk + 2))], [2])
+    if eng._swap is not None:
+        one = eng._fetch(eng._dev(eng._read_slot, eng.state, jnp.int32(0)))
+        eng._swap.swap_out(("warm", 0), one, 1, pinned=True)
+        blob, _, _ = eng._swap.swap_in(("warm", 0))
+        row = jax.tree.map(
+            lambda a: eng._push(np.asarray(a),
+                                eng._io and eng._io["swap_row"]), blob)
+        eng.state = eng._dev(eng._write, eng.state, jnp.int32(0), row)
+    reset_engine_stats(eng)
+
+
+def run_trace(eng, prompts, budgets, args):
+    warm_engine(eng, args)
+    eng.reset_clock()
+    reqs = [eng.submit(p, b) for p, b in zip(prompts, budgets)]
+    t0 = eng.now()
+    seen_np = {r.rid: 0 for r in reqs}
+    pending = {}                       # rid -> (preempt time, output len)
+    resume = []                        # preempt -> next-new-token latencies
+    while eng.scheduler.has_work():
+        eng.step()
+        t = eng.now()
+        for r in reqs:
+            if r.rid in pending and len(r.output) > pending[r.rid][1]:
+                resume.append(t - pending[r.rid][0])
+                del pending[r.rid]
+            if r.n_preemptions > seen_np[r.rid]:
+                seen_np[r.rid] = r.n_preemptions
+                pending[r.rid] = (t, len(r.output))
+    wall = eng.now() - t0
+    ttft = [r.first_token_time - r.arrival_time for r in reqs]
+    tpot = [(r.finish_time - r.first_token_time) / max(1, len(r.output) - 1)
+            for r in reqs]
+    return {
+        "outputs": [r.output for r in reqs],
+        "wall_s": wall,
+        "ttft_mean_ms": 1e3 * float(np.mean(ttft)),
+        "tpot_mean_ms": 1e3 * float(np.mean(tpot)),
+        "resume_ttft_mean_ms": (1e3 * float(np.mean(resume))
+                                if resume else None),
+        "resume_count": len(resume),
+        "steps": eng.stats["steps"],
+        "prefill_tokens": eng.stats["prefill_tokens"],
+        "preemptions": eng.stats["preemptions"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--quantum", type=int, default=4,
+                    help="fair-share residency quantum (tokens) — small "
+                         "values force the preemptions under test")
+    ap.add_argument("--cold-rows", type=int, default=None,
+                    help="cold-tier row budget; default requests * max_len")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(args.prompt_len // 2,
+                                             args.prompt_len + 1))).tolist()
+               for _ in range(args.requests)]
+    budgets = [int(rng.integers(max(2, args.budget // 2), args.budget + 1))
+               for _ in range(args.requests)]
+
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"prompt<={args.prompt_len} budget<={args.budget} "
+          f"chunk={args.chunk} policy=fair:{args.quantum}")
+
+    runs, engines = {}, {}
+    for label, on in (("recompute", False), ("swap", True)):
+        eng = make_engine(cfg, params, args, kv_swap=on)
+        runs[label] = run_trace(eng, prompts, budgets, args)
+        engines[label] = eng
+
+    rec, swp = runs["recompute"], runs["swap"]
+    parity = rec["outputs"] == swp["outputs"]
+    seng = engines["swap"]
+    record = {
+        "arch": cfg.name, "requests": args.requests, "slots": args.slots,
+        "chunk": args.chunk, "policy": f"fair:{args.quantum}",
+        "token_parity": parity,
+        "recompute": {k: v for k, v in rec.items() if k != "outputs"},
+        "swap": {k: v for k, v in swp.items() if k != "outputs"},
+        "resume_ttft_speedup": (
+            rec["resume_ttft_mean_ms"] / swp["resume_ttft_mean_ms"]
+            if rec["resume_ttft_mean_ms"] and swp["resume_ttft_mean_ms"]
+            else None),
+        "tpot_speedup": (rec["tpot_mean_ms"] / swp["tpot_mean_ms"]
+                         if swp["tpot_mean_ms"] else None),
+        "preempt_swaps": seng.stats["preempt_swaps"],
+        "preempt_recomputes": seng.stats["preempt_recomputes"],
+        "swap_out_bytes": seng.stats["swap_out_bytes"],
+        "swap_in_bytes": seng.stats["swap_in_bytes"],
+        "swap_out_cycles": seng.stats["swap_out_cycles"],
+        "swap_in_cycles": seng.stats["swap_in_cycles"],
+    }
+    print(f"{'mode':<10} {'resume-ttft-ms':>14} {'tpot-ms':>8} "
+          f"{'ttft-ms':>8} {'steps':>6} {'prefill-tok':>11} {'preempt':>7}")
+    for label in ("recompute", "swap"):
+        r = runs[label]
+        rt = r["resume_ttft_mean_ms"]
+        print(f"{label:<10} {rt if rt is None else round(rt, 1)!s:>14} "
+              f"{r['tpot_mean_ms']:8.2f} {r['ttft_mean_ms']:8.1f} "
+              f"{r['steps']:6d} {r['prefill_tokens']:11d} "
+              f"{r['preemptions']:7d}")
+    print(f"resume-ttft speedup {record['resume_ttft_speedup']:.2f}x  "
+          f"tpot speedup {record['tpot_speedup']:.2f}x  "
+          f"swaps={record['preempt_swaps']} "
+          f"out={record['swap_out_bytes']}B/{record['swap_out_cycles']}cyc "
+          f"in={record['swap_in_bytes']}B/{record['swap_in_cycles']}cyc")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print("wrote", args.json)
+    if not parity:
+        print("FAIL: swap run diverged from recompute run", file=sys.stderr)
+        return 1
+    if record["preempt_swaps"] == 0:
+        print("FAIL: no swap-based preemption exercised", file=sys.stderr)
+        return 1
+    if not (rec["resume_ttft_mean_ms"] and swp["resume_ttft_mean_ms"]
+            and swp["resume_ttft_mean_ms"] < rec["resume_ttft_mean_ms"]):
+        print("FAIL: swap resume TTFT did not beat recompute",
+              file=sys.stderr)
+        return 1
+    if not swp["tpot_mean_ms"] < rec["tpot_mean_ms"]:
+        print("FAIL: swap TPOT did not beat recompute", file=sys.stderr)
+        return 1
+    print("KV_SWAP_BENCH_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,11 @@ from repro.models import model as M
 from repro.serve.engine import ContinuousBatchingEngine
 from repro.serve.server import AsyncServer, collect
 
+try:                                   # invoked as benchmarks/<script>.py
+    from common import reset_engine_stats
+except ImportError:                    # imported as a benchmarks.* module
+    from benchmarks.common import reset_engine_stats
+
 
 def make_engine(cfg, params, args, prefix_cache: bool):
     # max_len fits the final turn's conversation plus its budget
@@ -64,12 +69,7 @@ def warmup(eng, args):
     p = list(range(1, args.chunk + 2))
     eng.generate_all([p], [2])
     eng.generate_all([p + [1, 2, 3]], [2])    # warm path on the cache engine
-    if eng._pcache is not None:
-        eng._pcache.clear()
-        for k in eng._pcache.stats:
-            eng._pcache.stats[k] = 0
-    for k in eng.stats:
-        eng.stats[k] = 0 if not isinstance(eng.stats[k], float) else 0.0
+    reset_engine_stats(eng)
 
 
 def run_trace(eng, args, shared, tails, budget):

@@ -66,6 +66,11 @@ from repro.configs import registry
 from repro.models import model as M
 from repro.serve.engine import ContinuousBatchingEngine
 
+try:                                   # invoked as benchmarks/<script>.py
+    from common import reset_engine_stats
+except ImportError:                    # imported as a benchmarks.* module
+    from benchmarks.common import reset_engine_stats
+
 
 def build_trace(rng, n, rate, max_prompt, max_new, n_users=4):
     """Poisson process: exponential inter-arrival gaps at ``rate`` req/s.
@@ -131,16 +136,9 @@ def warm_engine(eng, args):
     # multi-step engines warm with >= m budget so the fused block (and its
     # overshoot rewind) compiles before the measured run
     eng.generate_all(warm, [max(2, eng.multi_step)] * len(warm))
-    if eng._pcache is not None:
-        # flush the warmup prompts' leaves: the measured run starts from
-        # an empty trie with every slot back on the free heap
-        eng._pcache.clear()
-        for k in eng._pcache.stats:
-            eng._pcache.stats[k] = 0
-    for k, v in eng.stats.items():
-        # list-valued stats (the spec accepted-length histogram) re-zero
-        # in place at their length; scalars reset to 0
-        eng.stats[k] = [0] * len(v) if isinstance(v, list) else 0
+    # flush the warmup prompts' leaves and zero the counters: the measured
+    # run starts from an empty trie with every slot back on the free heap
+    reset_engine_stats(eng)
 
 
 def replay_trace(eng, arrivals, prompts, budgets, priorities, users):

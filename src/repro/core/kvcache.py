@@ -114,6 +114,11 @@ def path_gather(buf: jax.Array, base: jax.Array, sel: jax.Array,
     discipline.  All index operands may be traced.
     """
     W = sel.shape[1]
+    if W == 0:
+        # Zero-width window: nothing to compact.  Guarded statically so the
+        # degenerate trace never builds an empty gather/scatter (some XLA
+        # backends reject size-0 take_along_axis operands).
+        return buf
     base = jnp.asarray(base, jnp.int32)
     src = (base[:, None] + jnp.asarray(sel, jnp.int32)).reshape(
         (1, buf.shape[1], W) + (1,) * (buf.ndim - 3))
@@ -311,6 +316,87 @@ class SlotLedger:
 
     def held(self) -> set[int]:
         return set(self._counts)
+
+
+class ColdStore:
+    """Cold tier of the two-tier KV pool: evicted / preempted slot rows as
+    quantized host-side blocks (the flash/SLC-resident side of the paper's
+    hybrid — the hot tier is the donated int8 device pool).
+
+    Blocks are keyed opaque pytrees (already truncated to their live rows by
+    the swap layer) with LRU order and a row budget.  ``pinned`` blocks —
+    swapped-out preemption victims that *must* survive until re-admission —
+    are never evicted to make room; demoted prefix-cache leaves are
+    best-effort and may be.  ``put`` reports which unpinned keys it evicted
+    so the owner (the prefix cache) can drop the matching leaves.
+    """
+
+    def __init__(self, row_budget: int) -> None:
+        if row_budget < 0:
+            raise ValueError("row_budget must be >= 0")
+        self.row_budget = int(row_budget)
+        # key -> (tree, n_rows, n_bytes, pinned); insertion order is LRU
+        self._blocks: dict[Any, tuple[Any, int, int, bool]] = {}
+        self.rows_used = 0
+        self.bytes_used = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def has(self, key: Any) -> bool:
+        return key in self._blocks
+
+    def rows_of(self, key: Any) -> int:
+        return self._blocks[key][1]
+
+    def put(self, key: Any, tree: Any, n_rows: int, *,
+            pinned: bool = False) -> tuple[bool, list[Any]]:
+        """Store a block, evicting unpinned LRU blocks to make room.
+
+        Returns ``(ok, evicted_keys)``; on ``ok=False`` nothing was stored
+        (and nothing evicted) — the caller falls back to dropping the rows
+        (prefix leaf) or recompute-preemption (swap victim).
+        """
+        if key in self._blocks:
+            self.drop(key)
+        need = int(n_rows)
+        free = self.row_budget - self.rows_used
+        victims = []
+        if need > free:
+            reclaim = 0
+            for k, (_, rows, _, pin) in self._blocks.items():
+                if pin:
+                    continue
+                victims.append(k)
+                reclaim += rows
+                if need <= free + reclaim:
+                    break
+            if need > free + reclaim:
+                return False, []
+        for k in victims:
+            self.drop(k)
+        n_bytes = cache_bytes(tree)
+        self._blocks[key] = (tree, need, n_bytes, bool(pinned))
+        self.rows_used += need
+        self.bytes_used += n_bytes
+        return True, victims
+
+    def pop(self, key: Any) -> tuple[Any, int]:
+        """Remove and return ``(tree, n_rows)`` — the swap-in side."""
+        tree, n_rows, n_bytes, _ = self._blocks.pop(key)
+        self.rows_used -= n_rows
+        self.bytes_used -= n_bytes
+        return tree, n_rows
+
+    def drop(self, key: Any) -> bool:
+        if key not in self._blocks:
+            return False
+        self.pop(key)
+        return True
+
+    def touch(self, key: Any) -> None:
+        """Refresh LRU recency of ``key`` (a cold-tier hit)."""
+        self._blocks[key] = self._blocks.pop(key)
 
 
 def layer_view(cache: KVCache, layer: int) -> tuple[jax.Array, ...]:

@@ -62,3 +62,53 @@ def t_read(cfg: PlaneConfig) -> float:
     n_pass = ((1 << cfg.b_cell) - 1) / cfg.b_cell
     per_pass = max(lb.t_dec_bls, lb.t_pre) + P.T_SENSE_READ
     return lb.t_dec_wl + per_pass * n_pass + lb.t_dis
+
+
+# ----------------------------------------------------------------------------
+# KV tier transfers (hot slot pool <-> cold SLC-resident tier)
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TierTransfer:
+    """Modeled cost of moving ``n_bytes`` of quantized KV rows between the
+    hot slot pool and the cold SLC tier.
+
+    ``t_out`` (hot -> cold) is bounded by the device-level sequential SLC
+    program bandwidth ([19], multi-plane program overlap already folded into
+    ``SLC_WRITE_BPS``); ``t_in`` (cold -> hot) pays one Eq. (1) SLC page read
+    per page (spread over ``planes`` planes read in parallel) plus the flash
+    bus, each side plus one command round.
+    """
+
+    n_bytes: int
+    pages: int
+    t_out: float
+    t_in: float
+
+    @property
+    def cycles_out(self) -> int:
+        """``t_out`` at the RPU clock (Table I)."""
+        return int(round(self.t_out * P.RPU_CLOCK_HZ))
+
+    @property
+    def cycles_in(self) -> int:
+        return int(round(self.t_in * P.RPU_CLOCK_HZ))
+
+
+def slc_variant(cfg: PlaneConfig) -> PlaneConfig:
+    """The same plane geometry programmed SLC (1 bit/cell)."""
+    return dataclasses.replace(cfg, b_cell=P.SLC_BITS)
+
+
+def tier_transfer(n_bytes: int, cfg: PlaneConfig | None = None,
+                  planes: int = 1) -> TierTransfer:
+    """Cost entry point for one hot<->cold KV tier move of ``n_bytes``."""
+    if cfg is None:
+        cfg = P.SIZE_A
+    if n_bytes <= 0:
+        return TierTransfer(n_bytes=0, pages=0, t_out=0.0, t_in=0.0)
+    pages = -(-n_bytes // P.PAGE_BYTES)
+    t_out = P.CMD_OVERHEAD_S + n_bytes / P.SLC_WRITE_BPS
+    rounds = -(-pages // max(1, planes))
+    t_in = (P.CMD_OVERHEAD_S + rounds * t_read(slc_variant(cfg))
+            + n_bytes / P.FLASH_BUS_BPS)
+    return TierTransfer(n_bytes=int(n_bytes), pages=pages, t_out=t_out, t_in=t_in)

@@ -389,6 +389,25 @@ def prefix_gather_shardings(mesh) -> dict:
     return {"slot": r, "rows": r}
 
 
+def swap_row_shardings(mesh) -> dict:
+    """Tiered-pool swap I/O, pinned beside the pool: ``read_slot`` (the
+    swap-out gather) takes the pool at ``decode_state_shardings`` in and
+    replicates its batch=1 row tree out — the row crosses to the host
+    anyway, so a replicated output makes the explicit ``device_get`` a
+    single-shard fetch instead of an all-gather per leaf.  The slot-id
+    scalar replicates (it feeds dynamic slicing), and swap-*in* pushes the
+    restored row replicated too, landing through the same pinned
+    ``write_slot`` admissions use — so swap restores never migrate the
+    pool and meshed swap-resume stays token-identical to single-device.
+
+    * ``slot`` — the slot id scalar;
+    * ``row``  — the batch=1 row tree (out of ``read_slot``, into the
+      engine's ``_push`` on swap-in).
+    """
+    r = replicated(mesh)
+    return {"slot": r, "row": r}
+
+
 def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
                            state_abs: Any, mesh):
     """Slot-pool decode state: the batch/slot axis (dim 1 of every cache

@@ -132,6 +132,18 @@ def _print_prefix_stats(eng):
           f"reclaims={eng._pcache.stats['reclaims']}")
 
 
+def _print_swap_stats(eng):
+    if eng._swap is None:
+        return
+    print(f"kv swap: preempt_swaps={eng.stats['preempt_swaps']} "
+          f"recomputes={eng.stats['preempt_recomputes']} "
+          f"out={eng.stats['swap_outs']}/{eng.stats['swap_out_bytes']}B"
+          f"/{eng.stats['swap_out_cycles']}cyc "
+          f"in={eng.stats['swap_ins']}/{eng.stats['swap_in_bytes']}B"
+          f"/{eng.stats['swap_in_cycles']}cyc "
+          f"cold_rows={eng._swap.store.rows_used}/{eng._swap.store.row_budget}")
+
+
 def _run_continuous(cfg, params, args):
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 1
@@ -147,7 +159,10 @@ def _run_continuous(cfg, params, args):
                                    drafter=args.drafter,
                                    multi_step=args.multi_step,
                                    prefix_cache=args.prefix_cache,
-                                   prefix_cache_rows=args.prefix_rows)
+                                   prefix_cache_rows=args.prefix_rows,
+                                   kv_swap=args.kv_swap,
+                                   cold_rows=args.cold_rows,
+                                   drain_stall_limit=args.drain_stall_limit)
     prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
@@ -181,6 +196,7 @@ def _run_continuous(cfg, params, args):
               f"blocks={eng.stats['multi_blocks']} "
               f"fused_tokens={eng.stats['multi_tokens']}")
     _print_prefix_stats(eng)
+    _print_swap_stats(eng)
     steps = max(1, eng.stats["steps"])
     print(f"host {1e3 * (eng.stats['step_s'] - eng.stats['device_s']) / steps:.2f} ms/step  "
           f"device {1e3 * eng.stats['device_s'] / steps:.2f} ms/step  "
@@ -208,7 +224,10 @@ def _run_serve(cfg, params, args):
                                    drafter=args.drafter,
                                    multi_step=args.multi_step,
                                    prefix_cache=args.prefix_cache,
-                                   prefix_cache_rows=args.prefix_rows)
+                                   prefix_cache_rows=args.prefix_rows,
+                                   kv_swap=args.kv_swap,
+                                   cold_rows=args.cold_rows,
+                                   drain_stall_limit=args.drain_stall_limit)
     prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
@@ -245,6 +264,7 @@ def _run_serve(cfg, params, args):
     print(f"streamed {gen} tokens in {wall:.2f}s -> {gen/wall:.1f} tok/s | "
           f"steps={eng.stats['steps']} preemptions={eng.stats['preemptions']}")
     _print_prefix_stats(eng)
+    _print_swap_stats(eng)
     assert all(s.request.done for s in streams)
     assert not eng.scheduler.has_work() and not eng._carries
     if cancel_at is not None:
@@ -301,6 +321,18 @@ def main():
     ap.add_argument("--prefix-rows", type=int, default=None,
                     help="prefix-cache row budget (LRU eviction above it); "
                          "default slots * max_len")
+    ap.add_argument("--kv-swap", action="store_true",
+                    help="tiered KV pool: preemption victims swap their "
+                         "committed rows to a metered cold tier (restored "
+                         "on re-admission) when the modeled transfer beats "
+                         "replay; prefix-cache evictions demote instead of "
+                         "dropping")
+    ap.add_argument("--cold-rows", type=int, default=None,
+                    help="cold-tier row budget (with --kv-swap); default "
+                         "slots * max_len")
+    ap.add_argument("--drain-stall-limit", type=int, default=8,
+                    help="consecutive no-progress drain() iterations before "
+                         "the engine raises instead of spinning")
     ap.add_argument("--multi-step", type=int, default=1, metavar="M",
                     help="fused multi-step decode: run M greedy iterations "
                          "per jitted call (argmax fed back on device) when "

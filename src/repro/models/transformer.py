@@ -327,6 +327,23 @@ def write_slot(state: dict, slot: jax.Array, one: dict) -> dict:
     return {"groups": new_groups, "pos": pos}
 
 
+def read_slot(state: dict, slot: jax.Array) -> dict:
+    """Lift row ``slot`` of a pooled decode state out as a batch=1 state —
+    the exact inverse of :func:`write_slot`, and the device-side half of a
+    tiered-pool swap-out: the int8 payload + scales leave the pool verbatim,
+    so a block that round-trips through the cold tier and lands back via
+    :func:`write_slot` is byte-identical to the rows that left.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    groups = jax.tree.map(
+        lambda full: jax.lax.dynamic_index_in_dim(full, slot, axis=1,
+                                                  keepdims=True),
+        state["groups"])
+    pos = jax.lax.dynamic_slice(
+        jnp.asarray(state["pos"], jnp.int32), (slot,), (1,))
+    return {"groups": groups, "pos": pos}
+
+
 def copy_slot_prefix(state: dict, src: jax.Array, dst: jax.Array,
                      n: jax.Array) -> dict:
     """Prefix-cache row gather: ``dst``'s first ``n`` sequence rows of every

@@ -228,7 +228,10 @@ class ContinuousBatchingEngine:
                  multi_step: int = 1,
                  topk_preselect: bool = True,
                  prefix_cache: bool = False,
-                 prefix_cache_rows: int | None = None):
+                 prefix_cache_rows: int | None = None,
+                 kv_swap: bool = False,
+                 cold_rows: int | None = None,
+                 drain_stall_limit: int = 8):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -303,6 +306,31 @@ class ContinuousBatchingEngine:
             spec_k=self.spec_k, spec_tree=self.spec_tree,
             multi_step=self.multi_step)
         self.state = M.init_decode_state(cfg, n_slots, self._state_len)
+        if drain_stall_limit < 1:
+            raise ValueError("drain_stall_limit must be >= 1")
+        self.drain_stall_limit = int(drain_stall_limit)
+        # tiered pool: hot slot rows stay in the donated int8 pool above;
+        # the cold tier holds swapped-out preemption victims and demoted
+        # prefix-cache leaves as quantized host-side blocks with metered
+        # transfers (serve.kv_swap).  The crossover prices a victim's
+        # replay against the modeled per-token decode cost so preemption
+        # becomes a swap-vs-recompute policy choice.
+        self._swap = None
+        if kv_swap:
+            from repro.serve.kv_swap import SwapManager
+            replay_tpot = None
+            try:
+                from repro.core.mapping import flash_tpot_for
+                replay_tpot = float(
+                    flash_tpot_for(cfg, context_len=max_len)["total"])
+            except Exception:
+                pass  # unmapped config: no crossover, swap whenever room
+            swap_budget = (cold_rows if cold_rows is not None
+                           else n_slots * max_len)
+            self._swap = SwapManager(
+                swap_budget,
+                jax.eval_shape(T.read_slot, self.state, jnp.int32(0)),
+                replay_tpot_s=replay_tpot)
         self._last_tok = np.zeros((n_slots,), np.int32)
         self._slot_pos = np.zeros((n_slots,), np.int64)   # host cursor mirror
         self._carries: dict[int, Any] = {}        # slot -> prefill carry
@@ -327,6 +355,17 @@ class ContinuousBatchingEngine:
             # schemas stay backward-compatible (absent, not null, when off)
             self.stats.update({"prefix_hits": 0, "cached_tokens": 0,
                                "prefill_tokens_saved": 0})
+        if self._swap is not None:
+            # same absent-when-off rule as the prefix-cache keys
+            self.stats.update({"swap_outs": 0, "swap_ins": 0,
+                               "swap_out_bytes": 0, "swap_in_bytes": 0,
+                               "swap_out_cycles": 0, "swap_in_cycles": 0,
+                               "preempt_swaps": 0, "preempt_recomputes": 0})
+        if self._pcache is not None and self._swap is not None:
+            # LRU pressure demotes prefix leaves to the cold tier instead
+            # of dropping them; store evictions relay back as drop_cold
+            self._pcache.attach_cold_tier(self._demote_leaf_rows,
+                                          self._swap.drop)
         if self.spec_k or self.spec_tree:
             # per-window accepted-length histogram: index = drafted tokens
             # committed by one verify pass (0 .. draft budget), list-valued
@@ -392,6 +431,8 @@ class ContinuousBatchingEngine:
                 lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
                 donate_argnums=(1,))
             self._write = jax.jit(T.write_slot, donate_argnums=(0,))
+            if self._swap is not None:
+                self._read_slot = jax.jit(T.read_slot)
         else:
             self._shard_over_mesh()
 
@@ -417,6 +458,15 @@ class ContinuousBatchingEngine:
         self.state = jax.device_put(self.state, ssh)
         self._io = SH.serve_step_shardings(self.n_slots, mesh)
         self._io["pos"] = NamedSharding(mesh, P())
+        if self._swap is not None:
+            # swap I/O pins beside the pool: the row lift reads the sharded
+            # pool but lands replicated batch=1 rows (host-bound anyway),
+            # and swap-in pushes land replicated before the pinned write
+            rsh = SH.swap_row_shardings(mesh)
+            self._read_slot = jax.jit(
+                T.read_slot, in_shardings=(ssh, rsh["slot"]),
+                out_shardings=rsh["row"])
+            self._io["swap_row"] = rsh["row"]
         self._decode = jax.jit(
             lambda p, s, t: M.decode_step(p, cfg, s, t, self.rt),
             in_shardings=(qsh, ssh, self._io["tokens"]),
@@ -762,7 +812,12 @@ class ContinuousBatchingEngine:
         else:
             hit, n = self._pcache.lookup(req.prompt, req.prompt_len - 1)
             if hit is not None and n >= 1:
-                src, n_hit = hit.slot, n
+                if hit.slot is None:      # cold leaf: promote via swap-in
+                    n = self._promote_cold_hit(hit, req, n)
+                    if n >= 1:
+                        src, n_hit = req.slot, n
+                else:
+                    src, n_hit = hit.slot, n
         if src is None:
             self._carries[req.slot] = self._dev(self._carry_init)
             return
@@ -777,6 +832,28 @@ class ContinuousBatchingEngine:
         self.stats["prefix_hits"] += 1
         self.stats["prefill_tokens_saved"] += n_hit
         self.stats["cached_tokens"] = self._pcache.cached_rows
+
+    def _promote_cold_hit(self, leaf, req: Request, n: int) -> int:
+        """A warm admission matched a demoted (cold) leaf: consume it, swap
+        its block into the request's own slot, and resume chunked prefill
+        at the match (no gather — the rows land where they're needed;
+        retirement republishes the longer prefix hot).  Returns the usable
+        row count, 0 on a vanished block (fall back to a cold start)."""
+        key = self._pcache.promote(leaf)
+        try:
+            blob, rows, cost = self._swap.swap_in(key)
+        except KeyError:                  # pragma: no cover - guard
+            return 0
+        one = jax.tree.map(
+            lambda a: self._push(np.asarray(a),
+                                 self._io and self._io["swap_row"]),
+            blob)
+        self.state = self._dev(self._write, self.state,
+                               jnp.int32(req.slot), one)
+        self.stats["swap_ins"] += 1
+        self.stats["swap_in_bytes"] += cost.n_bytes
+        self.stats["swap_in_cycles"] += cost.cycles_in
+        return min(n, rows)
 
     def _run_chunk(self, req: Request, n: int) -> int:
         """Advance one PREFILLING slot by ``n`` prompt tokens (one [1, chunk]
@@ -818,12 +895,101 @@ class ContinuousBatchingEngine:
             ) from cause
 
     def _preempt(self, req: Request, now: float) -> None:
-        """Bump a resident back to the queue (recompute-style): generated
-        tokens are kept and replayed on re-admission."""
+        """Bump a resident back to the queue.  With the tiered pool on,
+        preemption is a policy choice: a DECODING victim's committed rows
+        swap out to the cold tier when the metered tier round-trip beats
+        replaying its tokens (``SwapManager.prefer_swap``); otherwise —
+        crossover says recompute, cold tier full, or mid-prefill victim —
+        it falls back to the recompute path (re-prefill + replay)."""
         self._carries.pop(req.slot, None)
-        self._rngs.pop(req.rid, None)     # replay re-consumes the stream
-        self.scheduler.preempt(req, now)
+        swapped = 0
+        if self._swap is not None and req.state is RequestState.DECODING:
+            swapped = self._swap_out_victim(req)
+        if swapped:
+            self.stats["preempt_swaps"] += 1
+            # the sampled stream continues where it left off (no replay
+            # draws), so the per-request rng must survive the round trip
+        else:
+            if self._swap is not None:
+                self.stats["preempt_recomputes"] += 1
+            self._rngs.pop(req.rid, None)  # replay re-consumes the stream
+        self.scheduler.preempt(req, now, swapped_rows=swapped)
         self.stats["preemptions"] += 1
+
+    def _relay_cold_evictions(self, evicted: list) -> None:
+        """Unpinned (prefix-leaf) blocks the cold store LRU-dropped to make
+        room: tell the trie so the matching cold leaves die too."""
+        if self._pcache is not None:
+            for key in evicted:
+                self._pcache.drop_cold(key)
+
+    def _swap_out_victim(self, req: Request) -> int:
+        """Lift the victim's committed rows off the pool and store them
+        cold under ``("req", rid)`` (pinned: a preempted resident's rows
+        are never LRU-dropped — only cancel/fail/swap-in release them).
+        Returns the swapped row count, 0 on fallback-to-recompute."""
+        n = int(self._slot_pos[req.slot])
+        replay_tokens = req.prompt_len + len(req.output)
+        if n < 1 or not self._swap.prefer_swap(n, replay_tokens):
+            return 0
+        one = self._fetch(self._dev(self._read_slot, self.state,
+                                    jnp.int32(req.slot)))
+        ok, evicted, cost = self._swap.swap_out(
+            ("req", req.rid), one, n, pinned=True)
+        self._relay_cold_evictions(evicted)
+        if not ok:
+            return 0
+        self.stats["swap_outs"] += 1
+        self.stats["swap_out_bytes"] += cost.n_bytes
+        self.stats["swap_out_cycles"] += cost.cycles_out
+        return n
+
+    def _admit_swapped(self, req: Request) -> None:
+        """Re-admission of a swap-preempted victim: swap its cold block in,
+        land it in the assigned slot with the donating ``write_slot``, and
+        resume DECODING directly — no prefill, no replay.  The restored
+        rows are byte-identical to the ones that left, so the continuation
+        is token-identical to an unpreempted run."""
+        n = req.swapped_rows
+        req.swapped_rows = 0
+        try:
+            blob, rows, cost = self._swap.swap_in(("req", req.rid))
+            one = jax.tree.map(
+                lambda a: self._push(np.asarray(a),
+                                     self._io and self._io["swap_row"]),
+                blob)
+            self.state = self._dev(self._write, self.state,
+                                   jnp.int32(req.slot), one)
+        except Exception as e:                        # noqa: BLE001
+            self._fail(req, f"{type(e).__name__}: {e}")
+            self._check_pool_alive(e)
+            return
+        assert rows == n, f"cold block rows {rows} != ledger {n}"
+        self.stats["swap_ins"] += 1
+        self.stats["swap_in_bytes"] += cost.n_bytes
+        self.stats["swap_in_cycles"] += cost.cycles_in
+        req.prefill_pos = req.prompt_len
+        req.replay_pos = len(req.output)
+        req.state = RequestState.DECODING
+        self._last_tok[req.slot] = req.output[-1]
+        self._slot_pos[req.slot] = rows
+        if (self.spec_k or self.spec_tree) and self._h_last is not None:
+            self._h_last[req.slot] = 0.0  # MTP head free-runs post-restore
+
+    def _demote_leaf_rows(self, slot: int, n_rows: int, key) -> bool:
+        """Prefix-cache demotion hook: move an LRU-evicted leaf's rows to
+        the cold tier (unpinned — the store may LRU-drop them later) so a
+        future warm admission can promote instead of cold-prefilling."""
+        one = self._fetch(self._dev(self._read_slot, self.state,
+                                    jnp.int32(slot)))
+        ok, evicted, cost = self._swap.swap_out(key, one, n_rows,
+                                                pinned=False)
+        self._relay_cold_evictions(evicted)
+        if ok:
+            self.stats["swap_outs"] += 1
+            self.stats["swap_out_bytes"] += cost.n_bytes
+            self.stats["swap_out_cycles"] += cost.cycles_out
+        return ok
 
     def _retire(self, req: Request, now: float) -> None:
         publish = None
@@ -841,6 +1007,8 @@ class ContinuousBatchingEngine:
     def _fail(self, req: Request, error: str) -> None:
         if req.slot is not None:          # died mid-chunk: drop its carry
             self._carries.pop(req.slot, None)
+        if self._swap is not None:        # orphaned cold block, if any
+            self._swap.drop(("req", req.rid))
         self.scheduler.fail(req, self._now(), error=error)
         self._rngs.pop(req.rid, None)
 
@@ -868,6 +1036,8 @@ class ContinuousBatchingEngine:
                 continue                  # raced with retire/fail: no-op
             if req.slot is not None:
                 self._carries.pop(req.slot, None)
+            if self._swap is not None:    # swapped-out victim cancelled
+                self._swap.drop(("req", req.rid))
             self.scheduler.cancel(req, now)
             self._rngs.pop(req.rid, None)
             did = True
@@ -900,7 +1070,11 @@ class ContinuousBatchingEngine:
             for req in self.scheduler.preemption_victims(now):
                 self._preempt(req, now)
         for req in self.scheduler.admit(now):
-            if self.chunk:
+            if req.swapped_rows:
+                # swap-preempted victim: restore its rows from the cold
+                # tier and resume decoding — both engine flavours
+                self._admit_swapped(req)
+            elif self.chunk:
                 # exception-safe like _admit_atomic: a failed carry
                 # allocation fails one request, never leaks the slot
                 try:
@@ -1314,12 +1488,12 @@ class ContinuousBatchingEngine:
         Terminates — never spins — when the remaining requests can make no
         progress: every terminal request (failed, cancelled, retired)
         leaves the queue/slots, so ``has_work()`` goes false; as a
-        backstop, consecutive no-work iterations with work still pending
-        raise instead of looping forever."""
+        backstop, ``drain_stall_limit`` consecutive no-work iterations
+        with work still pending raise instead of looping forever."""
         stalls = 0
         while self.scheduler.has_work():
             stalls = 0 if self.step() else stalls + 1
-            if stalls >= 8:
+            if stalls >= self.drain_stall_limit:
                 pending = ([r.rid for r in self.scheduler.queue]
                            + [r.rid for r in self.scheduler.active.values()])
                 raise RuntimeError(

@@ -1,0 +1,173 @@
+"""Swap layer of the tiered KV pool: metered hot <-> cold row transfers.
+
+The hot tier is the engine's donated int8 decode pool (slot rows in the
+fast SLC region); this module owns the **cold tier** — evicted or preempted
+slot rows held as quantized host-side blocks (the flash/SLC-resident side
+of the paper's hybrid; KVNAND / Cambricon-LLM's chiplet split in PAPERS.md)
+— and the explicit ``swap_out`` / ``swap_in`` transfers between them.
+
+Every transfer is metered twice:
+
+* **bytes** — the truncated block's actual payload (int8 rows + scales +
+  any fixed-size recurrent state), the tier-transfer traffic the engine
+  surfaces as ``swap_out_bytes`` / ``swap_in_bytes``;
+* **modeled PIM cost** — :func:`repro.core.pim.latency.tier_transfer`
+  prices the same bytes on the paper's device (SLC program bandwidth out,
+  Eq. (1) SLC page reads + flash bus back in) and converts to RPU-clock
+  cycles, surfaced as ``swap_out_cycles`` / ``swap_in_cycles``.
+
+The **swap-vs-replay crossover** makes preemption a policy choice instead
+of a hard-coded recompute: a victim's rows are worth swapping exactly when
+the modeled round-trip beats re-running its tokens through the
+bandwidth-bound decode path (each recomputed token pays a full weight-read
+pass — ``core.mapping.flash_tpot_for`` — so swap wins for all but the
+shortest residencies).
+
+Blocks round-trip **byte-exactly**: ``transformer.read_slot`` lifts the
+int8 payload + scales out verbatim, :meth:`SwapManager.truncate` keeps the
+``n`` live sequence rows (fixed-size SSM state travels whole), and
+:meth:`SwapManager.pad` zero-extends back to pool shape for ``write_slot``
+— the zero tail is masked garbage exactly like the rows it replaces, so a
+swap-resumed request is token-identical to an unpreempted run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import kvcache as KV
+from repro.core.pim import latency as L
+from repro.core.pim.params import PlaneConfig
+
+
+def _is_seq_block(b: Any) -> bool:
+    """An attention cache block ([n_p, B, S, ...] leaves, sequence axis 2):
+    GQA carries ``k_q``, MLA carries ``c_q``.  Everything else (SSM
+    recurrent state) is fixed-size and travels whole."""
+    return isinstance(b, dict) and ("k_q" in b or "c_q" in b)
+
+
+class SwapManager:
+    """Owns the cold tier (:class:`repro.core.kvcache.ColdStore`) plus the
+    truncate/pad plumbing and the cost model for one engine's pool.
+
+    ``template`` is the ``jax.eval_shape`` of ``read_slot`` on the pool —
+    the full-``S`` shapes :meth:`pad` rebuilds, and the source of the
+    per-row byte count the crossover prices before any row is fetched.
+    ``replay_tpot_s`` is the modeled seconds one recomputed token costs on
+    the paper's device (``None`` disables the crossover: swap whenever the
+    cold tier has room).
+    """
+
+    def __init__(self, cold_rows: int, template: dict, *,
+                 plane: PlaneConfig | None = None,
+                 replay_tpot_s: float | None = None):
+        self.store = KV.ColdStore(cold_rows)
+        self._template = template
+        self._plane = plane
+        self.replay_tpot_s = replay_tpot_s
+        self.row_bytes = 0        # payload bytes per live sequence row
+        self.fixed_bytes = 0      # fixed-size (SSM) state per block
+        for bufs in template["groups"]:
+            for b in bufs:
+                if _is_seq_block(b):
+                    for leaf in b.values():
+                        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                        self.row_bytes += n // leaf.shape[2]
+                else:
+                    self.fixed_bytes += sum(
+                        int(np.prod(x.shape)) * x.dtype.itemsize
+                        for x in jax.tree.leaves(b))
+
+    # -- cost model --------------------------------------------------------
+    def block_bytes(self, n_rows: int) -> int:
+        return self.fixed_bytes + n_rows * self.row_bytes
+
+    def transfer_cost(self, n_bytes: int) -> L.TierTransfer:
+        return L.tier_transfer(n_bytes, self._plane)
+
+    def prefer_swap(self, n_rows: int, replay_tokens: int) -> bool:
+        """The crossover rule: swap a preemption victim's ``n_rows`` when
+        the modeled tier round-trip (program out + page-read back) beats
+        recomputing ``replay_tokens`` through the decode path."""
+        if n_rows < 1 or n_rows > self.store.row_budget:
+            return False
+        if self.replay_tpot_s is None:
+            return True
+        tc = self.transfer_cost(self.block_bytes(n_rows))
+        return tc.t_out + tc.t_in < replay_tokens * self.replay_tpot_s
+
+    # -- block shaping -----------------------------------------------------
+    def truncate(self, one: dict, n: int) -> dict:
+        """Keep the ``n`` live sequence rows of a fetched batch=1 state
+        (fixed-size SSM state travels whole) — the cold block payload."""
+        groups = []
+        for bufs in one["groups"]:
+            slots = []
+            for b in bufs:
+                if _is_seq_block(b):
+                    slots.append({k: np.asarray(v)[:, :, :n]
+                                  for k, v in b.items()})
+                else:
+                    slots.append(jax.tree.map(np.asarray, b))
+            groups.append(tuple(slots))
+        return {"groups": tuple(groups),
+                "pos": np.asarray([n], np.int32)}
+
+    def pad(self, blob: dict) -> dict:
+        """Zero-extend a cold block back to pool row shape for
+        ``write_slot``.  The zero tail lands where masked garbage rows sat
+        before the swap-out, so the restored slot is byte-identical to the
+        one that left (rows ``[0:n)`` verbatim, the rest never attended)."""
+        n = int(np.asarray(blob["pos"])[0])
+        groups = []
+        for bufs, tpl_bufs in zip(blob["groups"], self._template["groups"]):
+            slots = []
+            for b, tpl in zip(bufs, tpl_bufs):
+                if _is_seq_block(b):
+                    out = {}
+                    for k, v in b.items():
+                        full = np.zeros(tpl[k].shape, tpl[k].dtype)
+                        full[:, :, :n] = v
+                        out[k] = full
+                    slots.append(out)
+                else:
+                    slots.append(b)
+            groups.append(tuple(slots))
+        return {"groups": tuple(groups),
+                "pos": np.asarray([n], np.int32)}
+
+    # -- transfers ---------------------------------------------------------
+    def swap_out(self, key: Any, one: dict, n_rows: int, *,
+                 pinned: bool = False
+                 ) -> tuple[bool, list[Any], L.TierTransfer]:
+        """Truncate a fetched slot row to its live prefix and store it cold.
+
+        Returns ``(ok, evicted_keys, cost)``: ``evicted_keys`` are unpinned
+        (prefix-leaf) blocks the store LRU-dropped to make room — the
+        caller must drop the matching trie leaves; on ``ok=False`` nothing
+        was stored and the caller falls back (recompute-preemption, or
+        plain leaf drop)."""
+        blob = self.truncate(one, int(n_rows))
+        ok, evicted = self.store.put(key, blob, int(n_rows), pinned=pinned)
+        cost = self.transfer_cost(KV.cache_bytes(blob) if ok else 0)
+        return ok, evicted, cost
+
+    def swap_in(self, key: Any) -> tuple[dict, int, L.TierTransfer]:
+        """Pop a cold block and rebuild the pool-shaped row: the engine
+        lands it with ``write_slot``.  Raises ``KeyError`` on a missing
+        block (a dropped/cancelled key) — callers treat that as a failed
+        admission."""
+        blob, n_rows = self.store.pop(key)
+        cost = self.transfer_cost(KV.cache_bytes(blob))
+        return self.pad(blob), n_rows, cost
+
+    def drop(self, key: Any) -> bool:
+        """Discard a cold block (cancel/fail of a swapped-out request, or
+        a demoted leaf whose trie entry died).  Idempotent."""
+        return self.store.drop(key)
+
+    def has(self, key: Any) -> bool:
+        return self.store.has(key)

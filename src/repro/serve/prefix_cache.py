@@ -40,6 +40,16 @@ Structure
   prefix already covered by an existing (equal or deeper) leaf is rejected
   — the cover is bumped instead — and a newly published extension evicts
   claim-only ancestor leaves it strictly covers, freeing their slots.
+* **Cold tier** (:meth:`RadixPrefixCache.attach_cold_tier`): with the
+  tiered KV pool on, eviction *demotes* a leaf instead of dropping it —
+  the engine swaps its rows to the cold store and the leaf stays in the
+  trie with ``slot=None`` and a cold-block key.  A later lookup that lands
+  on a cold leaf is *promoted*: the engine swaps the block into the new
+  request's own slot (consuming the leaf — retirement republishes the
+  longer prefix hot).  Hot leaves always win lookups over cold ones, cold
+  leaves never hold pool slots (no ledger entry, no ``row_budget`` rows —
+  the cold store budgets them), and strictly-covered cold leaves drop with
+  their covering publish like hot ancestors do.
 """
 from __future__ import annotations
 
@@ -59,17 +69,20 @@ class _Node:
 
 
 class _Leaf:
-    __slots__ = ("tokens", "slot", "n_rows", "last_used", "node")
+    __slots__ = ("tokens", "slot", "n_rows", "last_used", "node", "cold")
 
     def __init__(self, tokens: tuple, slot: int, node: _Node, tick: int):
         self.tokens = tokens
-        self.slot = slot
+        self.slot = slot                  # pool slot (None once demoted)
         self.n_rows = len(tokens)
         self.last_used = tick
         self.node = node
+        self.cold = None                  # cold-store key once demoted
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
-        return (f"_Leaf(slot={self.slot}, n_rows={self.n_rows}, "
+        tier = f"slot={self.slot}" if self.slot is not None \
+            else f"cold={self.cold!r}"
+        return (f"_Leaf({tier}, n_rows={self.n_rows}, "
                 f"last_used={self.last_used})")
 
 
@@ -95,8 +108,27 @@ class RadixPrefixCache:
         self._writers: set[int] = set()          # slots with an active alias
         self.cached_rows = 0
         self._clock = 0
+        self._cold: dict[object, _Leaf] = {}     # cold key -> its leaf
+        self._demote = None                      # engine swap-out callback
+        self._cold_drop = None                   # engine block-drop callback
+        self._next_cold_id = 0
         self.stats = {"publishes": 0, "rejects": 0, "evictions": 0,
-                      "reclaims": 0, "aliases": 0}
+                      "reclaims": 0, "aliases": 0, "demotions": 0,
+                      "promotions": 0, "cold_drops": 0}
+
+    # -- cold tier ---------------------------------------------------------
+    def attach_cold_tier(self, demote, drop) -> None:
+        """Wire the tiered-pool swap layer in: ``demote(slot, n_rows, key)``
+        swaps a leaf's rows out to the cold store (returns False when the
+        store refuses — the leaf drops as before), ``drop(key)`` discards a
+        cold block whose leaf died (covered by a deeper publish, or
+        ``clear``)."""
+        self._demote = demote
+        self._cold_drop = drop
+
+    @property
+    def n_cold_leaves(self) -> int:
+        return len(self._cold)
 
     # -- internals --------------------------------------------------------
     def _tick(self) -> int:
@@ -123,20 +155,30 @@ class RadixPrefixCache:
                 break
         return node, i
 
-    def _best_leaf(self, node: _Node) -> Optional[_Leaf]:
+    def _best_leaf(self, node: _Node,
+                   hot_only: bool = False) -> Optional[_Leaf]:
         """Most recently used leaf in ``node``'s subtree (LRU-friendly and
-        deterministic: ties break toward the lower slot)."""
-        best = None
+        deterministic: ties break toward the lower slot).  A hot leaf
+        always beats a cold one — serving from pool rows is free, a cold
+        hit pays a swap-in — and ``hot_only`` skips cold leaves entirely
+        (publish covers and reclaim protection only care about pool rows)."""
+        best_hot = best_cold = None
         stack = [node]
         while stack:
             cur = stack.pop()
-            if cur.leaf is not None and (
-                    best is None
-                    or (cur.leaf.last_used, -cur.leaf.slot)
-                    > (best.last_used, -best.slot)):
-                best = cur.leaf
+            leaf = cur.leaf
+            if leaf is not None:
+                if leaf.slot is not None:
+                    if (best_hot is None
+                            or (leaf.last_used, -leaf.slot)
+                            > (best_hot.last_used, -best_hot.slot)):
+                        best_hot = leaf
+                elif not hot_only:
+                    if (best_cold is None
+                            or leaf.last_used > best_cold.last_used):
+                        best_cold = leaf
             stack.extend(cur.children.values())
-        return best
+        return best_hot if best_hot is not None else best_cold
 
     def _drop_leaf(self, leaf: _Leaf) -> None:
         leaf.node.leaf = None
@@ -159,16 +201,76 @@ class RadixPrefixCache:
                 break
             node = parent
 
-    def _evict(self, leaf: _Leaf, *, reclaim: bool = False) -> int:
-        """Remove a claim-only leaf; frees (or returns) its slot."""
+    def _evict(self, leaf: _Leaf, *, reclaim: bool = False,
+               demote: bool = True) -> int:
+        """Remove a claim-only leaf's slot hold; frees (or returns) the
+        slot.  With a cold tier attached the leaf is *demoted* first —
+        its rows swap out and the leaf survives in the trie as a cold
+        leaf — unless ``demote=False`` (a strictly-covered ancestor or an
+        adopted reclaim: the rows live on hot, a cold copy is worthless)
+        or the swap-out fails (cold store full), in which case the leaf
+        drops exactly as without a cold tier."""
         slot = leaf.slot
-        self._drop_leaf(leaf)
+        if demote and self._demote is not None and self._demote_leaf(leaf):
+            pass                                 # leaf lives on cold
+        else:
+            self._drop_leaf(leaf)
         left = self.ledger.decref(slot)
         assert left == 0, f"evicted leaf on slot {slot} still held ({left})"
         self.stats["reclaims" if reclaim else "evictions"] += 1
         if not reclaim:
             self._free(slot)
         return slot
+
+    def _demote_leaf(self, leaf: _Leaf) -> bool:
+        """Swap a hot leaf's rows to the cold store; on success the leaf
+        stays in the trie with ``slot=None`` and the cold-block key."""
+        key = ("leaf", self._next_cold_id)
+        self._next_cold_id += 1
+        if not self._demote(leaf.slot, leaf.n_rows, key):
+            return False
+        del self._slots[leaf.slot]
+        self.cached_rows -= leaf.n_rows
+        leaf.slot = None
+        leaf.cold = key
+        self._cold[key] = leaf
+        self.stats["demotions"] += 1
+        return True
+
+    def _drop_cold_leaf(self, leaf: _Leaf, *, drop_block: bool = True,
+                        prune: bool = True) -> None:
+        """Remove a cold leaf from the trie; ``drop_block`` also discards
+        its block from the store (False when the store already evicted it,
+        or when the caller — promotion — takes the block over).  ``prune``
+        is False when the caller is about to attach a new leaf to the same
+        node — pruning would detach the node the new leaf lives on."""
+        key = leaf.cold
+        del self._cold[key]
+        leaf.node.leaf = None
+        leaf.cold = None
+        if prune:
+            self._prune(leaf.node)
+        if drop_block and self._cold_drop is not None:
+            self._cold_drop(key)
+
+    def drop_cold(self, key) -> None:
+        """The cold store LRU-evicted this leaf's block to make room (the
+        engine relays the eviction): drop the now-backless trie leaf."""
+        leaf = self._cold.get(key)
+        if leaf is not None:
+            self._drop_cold_leaf(leaf, drop_block=False)
+            self.stats["cold_drops"] += 1
+
+    def promote(self, leaf: _Leaf):
+        """Consume a cold leaf for a warm admission: the leaf leaves the
+        trie and its cold key is returned — the engine pops the block and
+        swaps it into the request's own slot (retirement republishes the
+        longer prefix hot)."""
+        assert leaf.slot is None and leaf.cold is not None
+        key = leaf.cold
+        self._drop_cold_leaf(leaf, drop_block=False)
+        self.stats["promotions"] += 1
+        return key
 
     def _evictable(self) -> list[_Leaf]:
         return [l for l in self._slots.values()
@@ -199,8 +301,9 @@ class RadixPrefixCache:
         match), so no gather ever writes into an aliased leaf."""
         tokens = tuple(tokens)
         node, i = self._walk(tokens, min(max_rows, len(tokens)))
-        if i < 1 or node.leaf is None or node.leaf.n_rows != i:
-            return None
+        if (i < 1 or node.leaf is None or node.leaf.slot is None
+                or node.leaf.n_rows != i):
+            return None                          # no hot exact-leaf match
         leaf = node.leaf
         if self.ledger.count(leaf.slot) != 1:
             return None                          # shared or already aliased
@@ -244,11 +347,14 @@ class RadixPrefixCache:
             return False
         node, i = self._walk(tokens, n_rows)
         if i == n_rows:
-            cover = self._best_leaf(node)
+            # only a HOT equal-or-deeper leaf rejects: a cold cover's rows
+            # cost a swap-in, so rows in hand always publish (the covered
+            # cold leaves drop below, with the other strict covers)
+            cover = self._best_leaf(node, hot_only=True)
             if cover is not None:
                 cover.last_used = self._tick()
-            self.stats["rejects"] += 1
-            return False
+                self.stats["rejects"] += 1
+                return False
         # descend again, splitting/creating nodes, collecting ancestor leaves
         ancestors: list[_Leaf] = []
         cur, j = self.root, 0
@@ -280,7 +386,14 @@ class RadixPrefixCache:
                 mid.children[tokens[j]] = tail
                 cur, j = tail, n_rows
             break
-        assert j == n_rows and cur.leaf is None, "covered prefix slipped in"
+        assert j == n_rows, "publish descent fell short"
+        if cur.leaf is not None:
+            # an equal-prefix COLD leaf: the hot rows in hand replace it
+            # (a hot equal leaf would have rejected above); prune=False —
+            # the new leaf is about to land on this very node
+            assert cur.leaf.slot is None, "covered prefix slipped in"
+            self._drop_cold_leaf(cur.leaf, prune=False)
+            self.stats["cold_drops"] += 1
         leaf = _Leaf(tokens, slot, cur, self._tick())
         cur.leaf = leaf
         self.ledger.incref(slot)                 # the new leaf claim
@@ -290,13 +403,20 @@ class RadixPrefixCache:
         # an aliased writer retiring on its own leaf's slot: the old
         # (shorter) leaf is among the ancestors and hands its claim over
         for anc in ancestors:
-            if anc.slot == slot:
+            if anc.slot is None:
+                # a strictly-covered cold leaf: its block is a prefix of
+                # the new hot rows — worthless, free the cold budget
+                self._drop_cold_leaf(anc)
+                self.stats["cold_drops"] += 1
+            elif anc.slot == slot:
                 anc.node.leaf = None
                 self.cached_rows -= anc.n_rows
                 self._prune(anc.node)
                 self.ledger.decref(slot)
             elif self.ledger.count(anc.slot) == 1:
-                self._evict(anc)                 # strictly covered: free it
+                # strictly covered: free the slot, never demote (the rows
+                # are a prefix of the new leaf's — a cold copy is dead)
+                self._evict(anc, demote=False)
         if slot in self._writers:                # retiring writer's hold
             self._writers.discard(slot)
             self.ledger.decref(slot)
@@ -333,27 +453,36 @@ class RadixPrefixCache:
             tokens = tuple(protect_tokens)
             node, i = self._walk(tokens, min(max_rows, len(tokens)))
             if i >= 1:
-                best = self._best_leaf(node)
+                best = self._best_leaf(node, hot_only=True)
                 if best is not None:
                     protected, n_match = best, min(i, best.n_rows)
         others = [l for l in lru if l is not protected]
         if others:
+            # the reclaimed slot's rows are about to be overwritten by the
+            # new resident — demoting first is exactly what keeps warm
+            # prefixes alive under slot pressure
             slot = self._evict(min(others, key=lambda l: l.last_used),
                                reclaim=True)
             return slot, 0
         # last resort: the only reclaimable leaf IS the match — adopt its
-        # slot (the prefix rows are already in place; no gather needed)
-        slot = self._evict(protected, reclaim=True)
+        # slot (the prefix rows are already in place; no gather needed, and
+        # no demotion: the rows keep serving the request hot)
+        slot = self._evict(protected, reclaim=True, demote=False)
         return slot, n_match
 
     def clear(self) -> int:
         """Evict every claim-only leaf (slots return through the free
-        callback); writer-held leaves stay.  Returns the eviction count —
+        callback) and drop every cold leaf (blocks discarded from the
+        store); writer-held leaves stay.  Returns the eviction count —
         benches call this after compile-warming so the measured run starts
         from an empty trie."""
         n = 0
         for leaf in list(self._evictable()):
-            self._evict(leaf)
+            self._evict(leaf, demote=False)
+            n += 1
+        for leaf in list(self._cold.values()):
+            self._drop_cold_leaf(leaf)
+            self.stats["cold_drops"] += 1
             n += 1
         return n
 

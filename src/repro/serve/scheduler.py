@@ -20,10 +20,15 @@ queue — is delegated to a pluggable :class:`SchedulingPolicy`:
   with a per-residency token *quantum*: a resident that has generated its
   quantum while a less-served user waits is preempted back to the queue.
 
-Preemption is recompute-style (vLLM's default): the victim keeps its
-generated tokens, its slot is freed, and on re-admission the engine
-re-prefills the prompt and *replays* the kept tokens through the decode path
-so the resumed request is token-identical to an un-preempted run.
+Preemption is a *policy choice* between two token-identical mechanisms.
+Recompute-style (vLLM's default): the victim keeps its generated tokens,
+its slot is freed, and on re-admission the engine re-prefills the prompt
+and *replays* the kept tokens through the decode path.  Swap-style (the
+tiered KV pool, ``serve/kv_swap.py``): the engine swaps the victim's
+committed rows to the cold tier first and passes ``swapped_rows`` here, so
+the request re-enters the queue with its prefill already credited
+(``prefill_pos`` stays at the prompt length — SJF sees the reduced
+remaining work) and re-admission restores the rows instead of recomputing.
 
 The slot lifecycle mirrors the paper's SLC-region residency:
 
@@ -84,6 +89,8 @@ class Request:
     replay_pos: int = 0                   # tokens re-fed after a preemption
     adopted_rows: int = 0                 # prefix rows already in own slot
     #   (reclaim adopted the matching leaf's slot — see RadixPrefixCache)
+    swapped_rows: int = 0                 # committed rows held in the cold
+    #   tier while QUEUED after a swap-based preemption (see kv_swap)
     n_preemptions: int = 0
     error: Optional[str] = None           # set when admission/prefill failed
     admit_time: Optional[float] = None
@@ -368,14 +375,20 @@ class Scheduler:
             self.queue.remove(req)
             slot = None
             req.adopted_rows = 0
-            if cache is not None:
+            if cache is not None and not req.swapped_rows:
                 # zero-copy admission: decode in place on a fully-matched
                 # cached leaf (writer hold taken; engine resolves the
-                # match through leaf_for(slot))
+                # match through leaf_for(slot)).  A swapped-out victim
+                # never aliases: its cold-tier rows (prompt + generated)
+                # restore into the slot and would clobber a live leaf.
                 slot = cache.alias_slot(req.prompt, req.prompt_len - 1)
             if slot is None:
                 if self.free_slots:
                     slot = heapq.heappop(self.free_slots)
+                elif req.swapped_rows:
+                    # any reclaimable slot serves a swap restore (the rows
+                    # arrive from the cold tier, nothing in-place to spare)
+                    slot, _ = cache.reclaim_slot()
                 else:
                     # slot pressure: LRU cache rows yield to live work
                     # (evict-before-preempt — see engine preemption gate);
@@ -401,15 +414,23 @@ class Scheduler:
     def preemption_victims(self, now: float = 0.0) -> list[Request]:
         return self.policy.victims(self.active, self.queue, now)
 
-    def preempt(self, req: Request, now: float = 0.0) -> None:
+    def preempt(self, req: Request, now: float = 0.0,
+                swapped_rows: int = 0) -> None:
         """Bump a resident back to the queue: the slot is freed, generated
-        output is kept (the engine replays it on re-admission)."""
+        output is kept.  ``swapped_rows > 0`` records that the engine moved
+        the victim's committed rows to the cold tier — the prefill cursor
+        keeps its credit (no re-prefill on re-admission; SJF's
+        ``remaining_work`` sees only the generation left) and the engine
+        restores the rows instead of replaying.  ``swapped_rows == 0`` is
+        the recompute path: the cursor resets and re-admission re-prefills
+        the prompt and replays the kept tokens."""
         assert req.slot is not None and self.active.get(req.slot) is req
         del self.active[req.slot]
         self._free_slot(req.slot)
         req.slot = None
         req.state = RequestState.QUEUED
-        req.prefill_pos = 0
+        req.swapped_rows = int(swapped_rows)
+        req.prefill_pos = req.prompt_len if swapped_rows else 0
         req.n_preemptions += 1
         self.queue.append(req)
 

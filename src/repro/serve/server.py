@@ -27,7 +27,10 @@ This is the layer that turns the engine from a batch replayer
   its *writer* hold — the leaf keeps its claim and the slot never lands
   on the free heap while cached rows live there, so a mid-stream
   disconnect can neither leak the slot nor double-free it (see
-  ``Scheduler._free_slot`` and DESIGN.md Sec. 1g).
+  ``Scheduler._free_slot`` and DESIGN.md Sec. 1g).  With the tiered KV
+  pool on (``kv_swap``), cancelling a victim that was swapped out while
+  queued also drops its pinned cold-tier block, so disconnected requests
+  never strand cold-row budget (DESIGN.md Sec. 1i).
 
 The engine step is a blocking jitted call, so the loop dispatches it to a
 single worker thread and awaits it — the event loop stays responsive for

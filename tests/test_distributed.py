@@ -320,6 +320,43 @@ class TestShardedServe:
         """)
         assert out.count("PARITY_OK") == 2
 
+    def test_sharded_swap_preempt_token_identical(self):
+        """Swap-based preemption over the 2x4 mesh must match the
+        single-device recompute engine token-for-token: the lifted slot row
+        (read_slot) and the restore write round-trip through replicated
+        host blocks (dist.sharding.swap_row_shardings), so tier placement
+        never perturbs the sampled/greedy streams.  Fair-share with a tiny
+        quantum forces the preemptions; the run must actually swap."""
+        out = _run_with_devices(8, """
+            import jax, numpy as np
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            cfg = ARCHS["llama3-8b"].reduced()
+            params = M.init_params(jax.random.key(0), cfg)
+            rng = np.random.default_rng(29)
+            prompts = [rng.integers(0, cfg.vocab_size,
+                                    rng.integers(6, 17)).tolist()
+                       for _ in range(6)]
+            budgets = [int(rng.integers(4, 10)) for _ in range(6)]
+            ref = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=32, chunk=4,
+                policy="fair:3").generate_all(prompts, budgets)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            rt = Runtime(mesh=mesh, data_axes=("data",),
+                         serve_resident_moe=True)
+            eng = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=32, chunk=4,
+                policy="fair:3", kv_swap=True, rt=rt)
+            got = eng.generate_all(prompts, budgets)
+            assert got == ref, (got, ref)
+            assert eng.stats["preempt_swaps"] > 0
+            assert eng.stats["swap_in_bytes"] == eng.stats["swap_out_bytes"]
+            print("SWAP_PARITY_OK", "swaps=%d" % eng.stats["preempt_swaps"])
+        """)
+        assert out.count("SWAP_PARITY_OK") == 1
+
     def test_sharded_spec_decode_token_identical(self):
         """Speculative decode over the mesh must match the single-device
         *non-speculative* engine token-for-token: the verify step's I/O is

@@ -1,0 +1,399 @@
+"""Tiered hot/cold KV pool: cold-store + tier-transfer units, the swap
+manager's byte-exact truncate/pad round trip, and the serve parity bar —
+swap-based preempt-resume must emit exactly what recompute-based resume
+(and an unpreempted run) emits, across policies and both engine flavours."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import kvcache as KV
+from repro.core.pim import latency as L
+from repro.core.pim import params as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# tier-transfer cost model (pure host code)
+# ---------------------------------------------------------------------------
+class TestTierTransfer:
+    def test_zero_bytes_is_free(self):
+        tc = L.tier_transfer(0)
+        assert tc.n_bytes == 0 and tc.pages == 0
+        assert tc.t_out == 0.0 and tc.t_in == 0.0
+        assert tc.cycles_out == 0 and tc.cycles_in == 0
+
+    def test_pages_round_up(self):
+        assert L.tier_transfer(1).pages == 1
+        assert L.tier_transfer(P.PAGE_BYTES).pages == 1
+        assert L.tier_transfer(P.PAGE_BYTES + 1).pages == 2
+
+    def test_cost_monotonic_in_bytes(self):
+        a, b = L.tier_transfer(1000), L.tier_transfer(100000)
+        assert b.t_out > a.t_out and b.t_in > a.t_in
+        assert b.cycles_out > a.cycles_out and b.cycles_in > a.cycles_in
+
+    def test_swap_in_pays_page_reads(self):
+        """Swap-in prices Eq. (1) SLC page reads + the flash bus; swap-out
+        prices the SLC program bandwidth — in is the expensive leg."""
+        tc = L.tier_transfer(64 * P.PAGE_BYTES)
+        assert tc.t_in > tc.t_out
+
+    def test_plane_parallel_reads_amortize(self):
+        one = L.tier_transfer(64 * P.PAGE_BYTES, planes=1)
+        four = L.tier_transfer(64 * P.PAGE_BYTES, planes=4)
+        assert four.t_in < one.t_in
+        assert four.t_out == one.t_out     # program leg is bandwidth-bound
+
+    def test_slc_variant_reads_faster(self):
+        assert L.t_read(L.slc_variant(P.SIZE_A)) < L.t_read(P.CONVENTIONAL)
+
+
+# ---------------------------------------------------------------------------
+# cold store (pure host code)
+# ---------------------------------------------------------------------------
+def _blk(n_rows, fill=1.0):
+    return {"x": np.full((2, n_rows, 4), fill, np.float32)}
+
+
+class TestColdStore:
+    def test_put_pop_roundtrip(self):
+        st = KV.ColdStore(row_budget=10)
+        ok, evicted = st.put("a", _blk(3), 3)
+        assert ok and evicted == []
+        assert st.has("a") and len(st) == 1
+        assert st.rows_used == 3 and st.bytes_used == _blk(3)["x"].nbytes
+        tree, n = st.pop("a")
+        assert n == 3 and not st.has("a")
+        assert st.rows_used == 0 and st.bytes_used == 0
+        np.testing.assert_array_equal(tree["x"], _blk(3)["x"])
+
+    def test_lru_evicts_unpinned_to_fit(self):
+        st = KV.ColdStore(row_budget=6)
+        st.put("old", _blk(3), 3)
+        st.put("new", _blk(3), 3)
+        ok, evicted = st.put("third", _blk(3), 3)
+        assert ok and evicted == ["old"]
+        assert not st.has("old") and st.has("new") and st.has("third")
+
+    def test_touch_refreshes_lru(self):
+        st = KV.ColdStore(row_budget=6)
+        st.put("a", _blk(3), 3)
+        st.put("b", _blk(3), 3)
+        st.touch("a")
+        ok, evicted = st.put("c", _blk(3), 3)
+        assert ok and evicted == ["b"]
+
+    def test_pinned_never_evicted(self):
+        st = KV.ColdStore(row_budget=6)
+        st.put("victim", _blk(4), 4, pinned=True)
+        ok, evicted = st.put("leaf", _blk(4), 4)
+        assert not ok and evicted == []        # cannot make room
+        assert st.has("victim") and not st.has("leaf")
+        assert st.rows_used == 4               # failed put left store intact
+
+    def test_oversized_put_rejected_untouched(self):
+        st = KV.ColdStore(row_budget=4)
+        st.put("a", _blk(2), 2)
+        ok, evicted = st.put("big", _blk(9), 9)
+        assert not ok and evicted == [] and st.has("a")
+
+    def test_reput_replaces(self):
+        st = KV.ColdStore(row_budget=10)
+        st.put("a", _blk(3, fill=1.0), 3)
+        st.put("a", _blk(5, fill=2.0), 5)
+        assert st.rows_used == 5 and len(st) == 1
+        tree, n = st.pop("a")
+        assert n == 5 and tree["x"][0, 0, 0] == 2.0
+
+    def test_drop_idempotent(self):
+        st = KV.ColdStore(row_budget=10)
+        st.put("a", _blk(1), 1)
+        assert st.drop("a") and not st.drop("a")
+        assert st.rows_used == 0
+
+    def test_pop_missing_raises(self):
+        with pytest.raises(KeyError):
+            KV.ColdStore(row_budget=4).pop("ghost")
+
+
+# ---------------------------------------------------------------------------
+# scheduler swap bookkeeping (pure host code)
+# ---------------------------------------------------------------------------
+class TestSchedulerSwap:
+    def test_swap_preempt_keeps_prefill_credit(self):
+        from repro.serve.scheduler import Request, Scheduler
+        s = Scheduler(n_slots=1, max_len=64)
+        r = Request(rid=0, prompt=list(range(10)), max_new_tokens=8,
+                    arrival_time=0.0)
+        s.submit(r)
+        s.admit()
+        r.output = [1, 2, 3]
+        s.preempt(r, swapped_rows=13)
+        assert r.swapped_rows == 13
+        assert r.prefill_pos == 10            # prefill credit survives
+        s2 = Scheduler(n_slots=1, max_len=64)
+        r2 = Request(rid=1, prompt=list(range(10)), max_new_tokens=8,
+                     arrival_time=0.0)
+        s2.submit(r2)
+        s2.admit()
+        r2.output = [1, 2, 3]
+        s2.preempt(r2)                        # recompute path
+        assert r2.swapped_rows == 0 and r2.prefill_pos == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity + tier mechanics
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def llama():
+    from repro.models import model as M
+    cfg = ARCHS["llama3-8b"].reduced()
+    return cfg, M.init_params(jax.random.key(0), cfg)
+
+
+def _engine(cfg, params, **kw):
+    from repro.serve.engine import ContinuousBatchingEngine
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _trace(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(6, 20))).tolist()
+               for _ in range(n)]
+    budgets = [int(rng.integers(4, 10)) for _ in range(n)]
+    return prompts, budgets
+
+
+class TestSwapRoundTripByteExact:
+    def test_truncate_pad_restores_live_rows_verbatim(self, llama):
+        """The cold block is the row's live prefix verbatim: pad(truncate)
+        equals the original on the committed rows for every cache leaf."""
+        from repro.models import transformer as T
+        from repro.serve.kv_swap import SwapManager
+        cfg, params = llama
+        eng = _engine(cfg, params, kv_swap=True)
+        eng.generate_all([list(range(1, 9))], [4])    # populate slot 0
+        n = int(eng._slot_pos[0])
+        assert n >= 8
+        one = eng._fetch(eng._dev(eng._read_slot, eng.state, jnp.int32(0)))
+        sm = eng._swap
+        back = sm.pad(sm.truncate(one, n))
+        for got, ref in zip(jax.tree.leaves(back), jax.tree.leaves(one)):
+            got, ref = np.asarray(got), np.asarray(ref)
+            assert got.shape == ref.shape and got.dtype == ref.dtype
+            if got.ndim >= 3 and got.shape[2] >= n:   # seq-axis leaves
+                np.testing.assert_array_equal(got[:, :, :n], ref[:, :, :n])
+            else:
+                np.testing.assert_array_equal(got, ref)
+
+    def test_prefer_swap_crossover(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params, kv_swap=True)
+        sm = eng._swap
+        assert not sm.prefer_swap(0, 100)             # nothing to swap
+        assert not sm.prefer_swap(sm.store.row_budget + 1, 100)
+        sm.replay_tpot_s = None
+        assert sm.prefer_swap(4, 1)                   # no model: always swap
+        sm.replay_tpot_s = 1e-12                      # replay ~free
+        assert not sm.prefer_swap(40, 1)
+        sm.replay_tpot_s = 1e3                        # replay ruinous
+        assert sm.prefer_swap(1, 1)
+
+
+class TestSwapPreemptParity:
+    @pytest.mark.parametrize("policy", ["fifo", "sjf", "fair:3"])
+    def test_policies_chunked(self, llama, policy):
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        ref = _engine(cfg, params, chunk=4).generate_all(prompts, budgets)
+        eng = _engine(cfg, params, chunk=4, policy=policy, kv_swap=True,
+                      cold_rows=len(prompts) * 48)
+        assert eng.generate_all(prompts, budgets) == ref
+        if policy.startswith("fair"):
+            assert eng.stats["preempt_swaps"] > 0
+            assert eng.stats["swap_ins"] == eng.stats["preempt_swaps"]
+            assert eng.stats["swap_in_bytes"] == eng.stats["swap_out_bytes"]
+            assert eng.stats["swap_out_cycles"] > 0
+            assert eng.stats["swap_in_cycles"] > 0
+
+    def test_priority_preempt_resume(self, llama):
+        """A high-priority arrival bumps a decoding resident; the swapped
+        victim's continuation matches a solo unpreempted run exactly."""
+        cfg, params = llama
+        prompts, _ = _trace(cfg)
+        solo = _engine(cfg, params, n_slots=1).generate_all(
+            [prompts[0]], [10])[0]
+        eng = _engine(cfg, params, n_slots=1, policy="priority:preempt",
+                      kv_swap=True)
+        lo = eng.submit(prompts[0], 10, priority=0)
+        for _ in range(3):
+            eng.step()
+        hi = eng.submit(prompts[1], 3, priority=9)
+        eng.drain()
+        assert lo.n_preemptions >= 1
+        assert eng.stats["preempt_swaps"] >= 1
+        assert lo.output == solo
+        assert len(hi.output) == 3
+
+    def test_atomic_prefill_swap_parity(self, llama):
+        """Swap-resume works on the unchunked engine too (the swapped
+        branch bypasses the atomic re-prefill entirely)."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        ref = _engine(cfg, params).generate_all(prompts, budgets)
+        eng = _engine(cfg, params, policy="fair:3", kv_swap=True,
+                      cold_rows=len(prompts) * 48)
+        assert eng.generate_all(prompts, budgets) == ref
+        assert eng.stats["preempt_swaps"] > 0
+
+    def test_sampled_stream_parity(self, llama):
+        """Swap-resume continues the sampled stream where it left off (the
+        rng survives the round trip; no draws replayed) — token-identical
+        to the recompute run, which re-draws the same stream from seed."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+
+        def run(**kw):
+            eng = _engine(cfg, params, chunk=4, policy="fair:3", **kw)
+            reqs = [eng.submit(p, b, temperature=0.8, top_k=8, seed=7 + i)
+                    for i, (p, b) in enumerate(zip(prompts, budgets))]
+            eng.drain()
+            return [r.output for r in reqs], eng
+
+        ref, _ = run()
+        got, eng = run(kv_swap=True, cold_rows=len(prompts) * 48)
+        assert got == ref
+        assert eng.stats["preempt_swaps"] > 0
+
+    def test_cold_budget_exhausted_falls_back_to_recompute(self, llama):
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        ref = _engine(cfg, params, chunk=4).generate_all(prompts, budgets)
+        eng = _engine(cfg, params, chunk=4, policy="fair:3", kv_swap=True,
+                      cold_rows=1)               # no victim ever fits
+        assert eng.generate_all(prompts, budgets) == ref
+        assert eng.stats["preempt_swaps"] == 0
+        assert eng.stats["preempt_recomputes"] > 0
+
+    def test_cancel_drops_cold_block(self, llama):
+        cfg, params = llama
+        prompts, _ = _trace(cfg)
+        eng = _engine(cfg, params, n_slots=1, policy="priority:preempt",
+                      kv_swap=True)
+        lo = eng.submit(prompts[0], 10, priority=0)
+        for _ in range(3):
+            eng.step()
+        hi = eng.submit(prompts[1], 3, priority=9)
+        eng.step()                       # preemption swaps lo out
+        assert eng._swap.has(("req", lo.rid))
+        eng.cancel(lo)
+        eng.drain()
+        assert not eng._swap.has(("req", lo.rid))
+        assert eng._swap.store.rows_used == 0
+        assert len(hi.output) == 3
+
+
+class TestColdTierDemotePromote:
+    def test_lru_eviction_demotes_and_readmission_promotes(self, llama):
+        """Under row pressure the prefix cache demotes LRU leaves to the
+        cold tier instead of dropping them; a later admission sharing the
+        prefix promotes the block back.  The invariant is tier-exactness:
+        serving the prefix from a promoted cold block must emit the same
+        tokens as serving it from the still-hot leaf (the demote/promote
+        round trip is byte-identical).  A cold-prefill reference would be
+        too strict — the warm tail attends a dequantized int8 prefix, and
+        near-ties can flip at argmax on smoke-scale weights (DESIGN.md
+        Sec. 1g) — so the hot-path run IS the reference."""
+        cfg, params = llama
+        rng = np.random.default_rng(3)
+        pre = rng.integers(0, cfg.vocab_size, 10).tolist()
+        a = pre + rng.integers(0, cfg.vocab_size, 4).tolist()
+        b = rng.integers(0, cfg.vocab_size, 14).tolist()  # disjoint: evicts
+        c = pre + rng.integers(0, cfg.vocab_size, 4).tolist()  # rehits a
+
+        def serial(rows, swap):
+            eng = _engine(cfg, params, chunk=4, prefix_cache=True,
+                          prefix_cache_rows=rows, kv_swap=swap)
+            return eng, [eng.generate_all([p], [4])[0] for p in (a, b, c)]
+
+        # budget 64: every leaf stays hot, c gathers a's rows from its slot
+        hot_eng, hot = serial(64, False)
+        # budget 20: publish(b) demotes leaf a; c's lookup finds only the
+        # cold leaf and promotes the block back into its own slot
+        cold_eng, cold = serial(20, True)
+        assert cold == hot
+        assert hot_eng._pcache.stats["promotions"] == 0
+        assert cold_eng._pcache.stats["demotions"] > 0
+        assert cold_eng._pcache.stats["promotions"] == 1
+        assert cold_eng.stats["prefix_hits"] > 0
+        assert cold_eng.stats["swap_ins"] == 1
+        assert cold_eng.stats["swap_in_bytes"] > 0
+
+    def test_cold_leaf_beats_cold_prefill_not_hot(self, llama):
+        """_best_leaf prefers hot leaves; a cold leaf only serves when no
+        hot leaf covers the node."""
+        from repro.serve.prefix_cache import RadixPrefixCache
+        pc = RadixPrefixCache(row_budget=100)
+        store = {}
+        pc.attach_cold_tier(
+            demote=lambda slot, n, key: store.setdefault(key, n) or True,
+            drop=lambda key: store.pop(key, None) is not None)
+        assert pc.publish([1, 2, 3, 4], slot=0, n_rows=4)
+        leaf = pc.leaf_for(0)
+        assert pc._demote_leaf(leaf)       # force-demote the leaf
+        cold, n = pc.lookup([1, 2, 3, 4, 9], max_rows=10)
+        assert cold is not None and cold.slot is None and n == 4
+        assert pc.publish([1, 2, 3, 4], slot=1, n_rows=4)  # hot again
+        hot, n = pc.lookup([1, 2, 3, 4, 9], max_rows=10)
+        assert hot is not None and hot.slot == 1 and n == 4
+        # the republish replaced the equal-prefix cold leaf: its block was
+        # dropped from the store and the trie holds no cold leaves
+        assert not store and not pc._cold
+        assert cold.cold is None           # the old leaf object is inert
+        pc.clear()
+
+    def test_store_eviction_drops_trie_leaf(self, llama):
+        """When the cold store LRU-drops a demoted block, the relay kills
+        the matching trie leaf: no leaf ever points at a vanished block."""
+        cfg, params = llama
+        rng = np.random.default_rng(5)
+        mk = lambda: rng.integers(0, cfg.vocab_size, 12).tolist()
+        eng = _engine(cfg, params, chunk=4, prefix_cache=True,
+                      prefix_cache_rows=16, kv_swap=True, cold_rows=20)
+        for _ in range(4):                 # distinct prompts: every retire
+            eng.generate_all([mk()], [4])  # publishes, pressure demotes,
+        pc = eng._pcache                   # tiny store LRU-drops old blocks
+        assert pc.stats["demotions"] > 0
+        for leaf in pc._cold.values():
+            assert eng._swap.has(leaf.cold)
+        assert eng._swap.store.rows_used <= 20
+
+
+class TestStatsSchema:
+    def test_swap_keys_absent_when_off(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params)
+        assert "swap_outs" not in eng.stats
+        assert "preempt_swaps" not in eng.stats
+        assert eng._swap is None
+
+    def test_swap_keys_present_when_on(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params, kv_swap=True)
+        for k in ("swap_outs", "swap_ins", "swap_out_bytes",
+                  "swap_in_bytes", "swap_out_cycles", "swap_in_cycles",
+                  "preempt_swaps", "preempt_recomputes"):
+            assert eng.stats[k] == 0
+
+    def test_drain_stall_limit_configurable(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params, drain_stall_limit=3)
+        assert eng.drain_stall_limit == 3
+        with pytest.raises(ValueError):
+            _engine(cfg, params, drain_stall_limit=0)

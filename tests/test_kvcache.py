@@ -198,6 +198,44 @@ class TestPrefixCopy:
             assert int(out.lengths[dst]) == n
 
 
+class TestZeroRowEdges:
+    """n == 0 degenerate copies: no payload moves, no size-0 gather traces."""
+
+    def test_copy_prefix_zero_rows(self):
+        cache = KV.init_cache(L, B, S, H, D)
+        k, v = _kv(21, t=4)
+        cache = KV.append_layer(cache, 0, k, v, 0)
+        before = np.asarray(cache.k_q[0, 2])
+        out = KV.copy_prefix(cache, 0, 2, 0)
+        np.testing.assert_array_equal(np.asarray(out.k_q[0, 2]), before)
+        assert out.lengths.tolist() == [0, 0, 0]
+
+    def test_path_gather_zero_width_window(self):
+        """A [B, 0] selector is the W==0 static edge: identity, even under
+        jit (the guard keeps the trace free of size-0 take_along_axis)."""
+        buf = jax.random.normal(jax.random.key(22), (L, B, S, H, D))
+        base = jnp.array([0, 3, 7], jnp.int32)
+        sel = jnp.zeros((B, 0), jnp.int32)
+        keep = jnp.zeros((B,), jnp.int32)
+        for f in (KV.path_gather, jax.jit(KV.path_gather)):
+            np.testing.assert_array_equal(
+                np.asarray(f(buf, base, sel, keep)), np.asarray(buf))
+
+    def test_copy_slot_prefix_zero_rows(self):
+        """Engine-level gather with n=0 (empty prefix match): every leaf's
+        dst rows keep their dead entries and only pos[dst] lands at 0."""
+        from repro.models.transformer import copy_slot_prefix
+        key = jax.random.key(23)
+        leaf = jax.random.normal(key, (2, B, S, H, D))
+        state = {"groups": [(leaf, leaf * 2)],
+                 "pos": jnp.array([4, 6, 2], jnp.int32)}
+        out = copy_slot_prefix(state, jnp.int32(0), jnp.int32(2), jnp.int32(0))
+        for got, want in zip(jax.tree.leaves(out["groups"]),
+                             jax.tree.leaves(state["groups"])):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert out["pos"].tolist() == [4, 6, 0]
+
+
 class TestSlotLedger:
     """Host-side refcounts over pool slots (prefix-cache holds)."""
 
@@ -221,6 +259,33 @@ class TestSlotLedger:
     def test_release_without_hold_raises(self):
         with pytest.raises(RuntimeError):
             KV.SlotLedger().decref(0)
+
+    def test_randomized_claim_storm(self):
+        """Property test over mixed publish/alias/cancel/preempt/evict
+        storms: the ledger must track a shadow refcount map exactly —
+        ``held()`` is always the live-claim set, counts never go negative,
+        and every release below zero raises instead of corrupting."""
+        rng = np.random.default_rng(17)
+        led = KV.SlotLedger()
+        shadow: dict[int, int] = {}
+        for _ in range(2000):
+            slot = int(rng.integers(0, 8))
+            have = shadow.get(slot, 0)
+            op = rng.choice(["publish", "alias", "release", "bad_release"])
+            if op in ("publish", "alias"):          # leaf claim / alias writer
+                assert led.incref(slot) == have + 1
+                shadow[slot] = have + 1
+            elif op == "release" and have:          # cancel / preempt / evict
+                assert led.decref(slot) == have - 1
+                if have == 1:
+                    del shadow[slot]
+                else:
+                    shadow[slot] = have - 1
+            elif op == "bad_release" and not have:  # double free must raise
+                with pytest.raises(RuntimeError):
+                    led.decref(slot)
+            assert led.count(slot) == shadow.get(slot, 0)
+            assert led.held() == set(shadow)
 
 
 class TestSpeculativeRollback:
