@@ -1,0 +1,235 @@
+"""Fault-injection chaos benchmark: recovered streams must be
+token-identical to a fault-free run, per scheduling policy.
+
+One burst trace (ragged chunked-prefill requests over a small slot pool)
+is replayed twice per policy on otherwise identical tiered-KV engines:
+
+* **baseline** — no injector: the reference token streams.
+* **chaos** — a seeded :class:`~repro.serve.faults.FaultInjector` drives
+  all three fault classes of DESIGN §1j at once: NAND bit-flips in every
+  cold-store read (BER high enough that each read needs ECC correction,
+  with the occasional page beyond the BCH ``t`` budget surfacing as an
+  uncorrectable block), transient jitted-step failures that consume the
+  donated pool (bounded retry + pool rebuild), and permanent plane/slot
+  losses (quarantine + resident recovery).
+
+The gates — this is a regression harness, not a reporter:
+
+* every request finishes with no error and **token parity** against the
+  baseline run, for every policy (the preemptive ones exercise the
+  swap/cold-read recovery surface; FIFO/SJF exercise pure step-failure
+  and slot-loss recovery);
+* at least ``--min-faults`` injected fault *events* fired in total
+  (corrupted cold reads + step failures + slot losses — individual bit
+  flips are not events);
+* zero hangs: each trace must drain within a step budget;
+* the slot ledger balances after recovery (free + quarantined == slots,
+  no carry leaks, scheduler drained);
+* the ECC and recovery machinery actually metered work (checks, pages,
+  cycles, corrected bits, pool rebuilds all non-zero).
+
+    PYTHONPATH=src python benchmarks/fault_bench.py --json BENCH_faults.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.faults import FaultInjector
+
+POLICIES = ("fifo", "sjf", "priority:preempt", "fair:2")
+
+
+def make_engine(cfg, params, args, policy, faults):
+    max_len = args.prompt_len + args.budget + 1
+    return ContinuousBatchingEngine(
+        cfg, params, n_slots=args.slots, max_len=max_len,
+        policy=policy, chunk=args.chunk, kv_swap=True,
+        cold_rows=args.requests * max_len,
+        faults=faults)
+
+
+def make_injector(args):
+    """Fresh injector per engine: injectors carry fired-event state.
+    ``step_fail_every`` must exceed the longest recompute-replay (prompt
+    re-prefill + one recorded token per decode step) or recovery can't
+    outrun the next injected failure — a livelock, not a bug."""
+    return FaultInjector(
+        seed=args.seed, ber=args.ber,
+        step_fail_every=args.fault_every,
+        slot_loss_at=((args.slot_loss_step, 1),
+                      (2 * args.slot_loss_step, args.slots - 1)))
+
+
+def run_trace(eng, prompts, budgets, priorities, users, max_steps):
+    reqs = [eng.submit(p, b, priority=pr, user=u)
+            for p, b, pr, u in zip(prompts, budgets, priorities, users)]
+    steps = 0
+    while eng.scheduler.has_work():
+        eng.step()
+        steps += 1
+        if steps > max_steps:
+            raise RuntimeError(
+                f"trace did not drain within {max_steps} steps "
+                f"(policy={eng.policy.name}): recovery is not converging")
+    return reqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=14)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ber", type=float, default=1.5e-3,
+                    help="injected raw bit error rate on cold reads: ~3 "
+                         "flips per 256 B page on average — almost always "
+                         "inside the BCH t=8 budget, with the occasional "
+                         "page beyond it (an uncorrectable block)")
+    ap.add_argument("--fault-every", type=int, default=30,
+                    help="transient step failure every N engine steps; must "
+                         "exceed the longest recompute-replay or recovery "
+                         "livelocks (see make_injector)")
+    ap.add_argument("--slot-loss-step", type=int, default=40,
+                    help="first slot loss fires here, the second at 2x")
+    ap.add_argument("--min-faults", type=int, default=50,
+                    help="minimum injected fault events across all policies")
+    ap.add_argument("--max-steps", type=int, default=5000,
+                    help="per-trace step budget — the zero-hang gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(args.prompt_len // 2,
+                                             args.prompt_len + 1))).tolist()
+               for _ in range(args.requests)]
+    budgets = [int(rng.integers(max(2, args.budget // 2), args.budget + 1))
+               for _ in range(args.requests)]
+    priorities = [int(p) for p in rng.integers(0, 4, size=args.requests)]
+    users = [f"u{u}" for u in rng.integers(0, 4, size=args.requests)]
+
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"prompt<={args.prompt_len} budget<={args.budget} "
+          f"chunk={args.chunk} ber={args.ber} "
+          f"fault_every={args.fault_every} "
+          f"slot_loss@{args.slot_loss_step},{2 * args.slot_loss_step}")
+
+    total_events = 0
+    failures = []
+    policies_rec = {}
+    print(f"{'policy':<18} {'parity':>6} {'events':>6} {'ecc-chk':>7} "
+          f"{'corr-bits':>9} {'uncorr':>6} {'rereads':>7} {'recomp':>6} "
+          f"{'rebuilds':>8} {'quar':>4} {'steps':>6}")
+    for pol in POLICIES:
+        base = run_trace(make_engine(cfg, params, args, pol, None),
+                         prompts, budgets, priorities, users, args.max_steps)
+        inj = make_injector(args)
+        eng = make_engine(cfg, params, args, pol, inj)
+        reqs = run_trace(eng, prompts, budgets, priorities, users,
+                         args.max_steps)
+
+        errs = [r for r in reqs if r.error is not None]
+        parity = (not errs and
+                  [r.output for r in reqs] == [r.output for r in base])
+        events = (inj.injected["bitflip_reads"]
+                  + inj.injected["step_failures"]
+                  + inj.injected["slot_losses"])
+        total_events += events
+        s = eng.stats
+        sched = eng.scheduler
+        ledger_ok = (len(sched.free_slots) + len(sched.quarantined)
+                     == args.slots
+                     and not eng._carries and not sched.has_work())
+        if not parity:
+            failures.append(f"{pol}: token parity broken "
+                            f"({len(errs)} errored requests)")
+        if not ledger_ok:
+            failures.append(
+                f"{pol}: ledger leak — free={len(sched.free_slots)} "
+                f"quarantined={len(sched.quarantined)} "
+                f"carries={len(eng._carries)}")
+        rec = {
+            "token_parity": parity, "events": events,
+            "injected": dict(inj.injected),
+            "ecc_checks": s["ecc_checks"], "ecc_pages": s["ecc_pages"],
+            "ecc_cycles": s["ecc_cycles"],
+            "ecc_corrected_bits": s["ecc_corrected_bits"],
+            "uncorrectable_blocks": s["uncorrectable_blocks"],
+            "cold_rereads": s["cold_rereads"],
+            "recovery_recomputes": s["recovery_recomputes"],
+            "step_failures": s["step_failures"],
+            "step_retries": s["step_retries"],
+            "pool_rebuilds": s["pool_rebuilds"],
+            "slot_losses": s["slot_losses"],
+            "quarantined_slots": s["quarantined_slots"],
+            "preempt_swaps": s["preempt_swaps"],
+            "steps": s["steps"],
+        }
+        policies_rec[pol] = rec
+        print(f"{pol:<18} {str(parity):>6} {events:>6d} "
+              f"{rec['ecc_checks']:>7d} {rec['ecc_corrected_bits']:>9d} "
+              f"{rec['uncorrectable_blocks']:>6d} {rec['cold_rereads']:>7d} "
+              f"{rec['recovery_recomputes']:>6d} {rec['pool_rebuilds']:>8d} "
+              f"{rec['quarantined_slots']:>4d} {rec['steps']:>6d}")
+
+    agg = {k: sum(r[k] for r in policies_rec.values())
+           for k in ("ecc_checks", "ecc_pages", "ecc_cycles",
+                     "ecc_corrected_bits", "uncorrectable_blocks",
+                     "cold_rereads", "recovery_recomputes", "pool_rebuilds")}
+    if total_events < args.min_faults:
+        failures.append(f"only {total_events} injected fault events "
+                        f"(< {args.min_faults})")
+    for k in ("ecc_checks", "ecc_pages", "ecc_cycles", "ecc_corrected_bits",
+              "pool_rebuilds"):
+        if agg[k] == 0:
+            failures.append(f"{k} never metered")
+    if agg["cold_rereads"] + agg["recovery_recomputes"] == 0:
+        failures.append("no recovery path (cold re-read / recompute) ran")
+
+    record = {
+        "bench": "faults", "arch": cfg.name,
+        "requests": args.requests, "slots": args.slots,
+        "chunk": args.chunk, "seed": args.seed,
+        "ber": args.ber, "fault_every": args.fault_every,
+        "slot_loss_steps": [args.slot_loss_step, 2 * args.slot_loss_step],
+        "total_fault_events": total_events,
+        "min_faults": args.min_faults,
+        "token_parity": all(r["token_parity"]
+                            for r in policies_rec.values()),
+        "aggregate": agg,
+        "policies": policies_rec,
+    }
+    print(f"total fault events: {total_events} (gate >= {args.min_faults})  "
+          f"ecc: {agg['ecc_checks']}chk/{agg['ecc_pages']}pg"
+          f"/{agg['ecc_cycles']}cyc corrected_bits={agg['ecc_corrected_bits']} "
+          f"uncorrectable={agg['uncorrectable_blocks']} "
+          f"rebuilds={agg['pool_rebuilds']}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print("wrote", args.json)
+    if failures:
+        for msg in failures:
+            print("FAIL:", msg, file=sys.stderr)
+        return 1
+    print("FAULT_BENCH_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

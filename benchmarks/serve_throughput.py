@@ -104,6 +104,21 @@ def percentile(sorted_vals, q):
     return sorted_vals[i]
 
 
+def make_chaos(args):
+    """Fresh injector per engine (injectors carry fired-event state).
+    Chaos never runs under --parity: the streamed/batch runs take different
+    step counts, so step-indexed faults would hit different work."""
+    if getattr(args, "parity", False):
+        return None
+    ber = getattr(args, "ber", None)
+    every = getattr(args, "fault_every", 0)
+    if ber is None and not every:
+        return None
+    from repro.serve.faults import FaultInjector
+    return FaultInjector(seed=getattr(args, "faults_seed", 0),
+                         ber=ber, step_fail_every=every)
+
+
 def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1,
                 prefix_cache=None, spec_tree=0):
     max_len = args.max_prompt + args.max_new + 1
@@ -117,7 +132,9 @@ def make_engine(cfg, params, args, rt, spec_k=0, multi_step=1,
         spec_branch=getattr(args, "spec_branch", 2),
         drafter=args.drafter, multi_step=multi_step,
         prefix_cache=prefix_cache,
-        prefix_cache_rows=getattr(args, "prefix_rows", None))
+        prefix_cache_rows=getattr(args, "prefix_rows", None),
+        kv_swap=getattr(args, "kv_swap", False),
+        faults=make_chaos(args))
 
 
 def warm_engine(eng, args):
@@ -334,6 +351,20 @@ def summarize(policy, eng, reqs, wall):
             "prefix_evictions": eng._pcache.stats["evictions"]
             + eng._pcache.stats["reclaims"],
         })
+    if eng._faults_on:
+        # present only in chaos runs (absent, not null, otherwise)
+        rec.update({
+            "ecc_checks": eng.stats.get("ecc_checks", 0),
+            "ecc_cycles": eng.stats.get("ecc_cycles", 0),
+            "ecc_corrected_bits": eng.stats.get("ecc_corrected_bits", 0),
+            "bitflips_injected": eng.stats.get("bitflips_injected", 0),
+            "uncorrectable_blocks": eng.stats.get("uncorrectable_blocks", 0),
+            "cold_rereads": eng.stats.get("cold_rereads", 0),
+            "recovery_recomputes": eng.stats.get("recovery_recomputes", 0),
+            "step_failures": eng.stats["step_failures"],
+            "step_retries": eng.stats["step_retries"],
+            "pool_rebuilds": eng.stats["pool_rebuilds"],
+        })
     return rec
 
 
@@ -411,6 +442,18 @@ def main():
                          "policy (honours --chunk/--spec-k), then exit")
     ap.add_argument("--stream-buffer", type=int, default=16,
                     help="per-stream token queue bound in --serve/--parity")
+    ap.add_argument("--kv-swap", action="store_true",
+                    help="tiered KV pool (cold-store swaps); required for "
+                         "--ber chaos to have a surface to corrupt")
+    ap.add_argument("--ber", type=float, default=None,
+                    help="chaos: inject NAND bit-flips into cold-store reads "
+                         "at this raw bit error rate (needs --kv-swap)")
+    ap.add_argument("--fault-every", type=int, default=0, metavar="N",
+                    help="chaos: fail the jitted step every N engine steps "
+                         "(consumes the donated pool; the engine's bounded "
+                         "retry + pool rebuild path absorbs it)")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="chaos injector seed (fresh injector per engine)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary record as JSON")
     args = ap.parse_args()
@@ -506,6 +549,10 @@ def main():
                "spec_branch": args.spec_branch, "drafter": args.drafter,
                "multi_step": multi_ms,
                "prefix_cache": args.prefix_cache,
+               "chaos": ({"ber": args.ber, "fault_every": args.fault_every,
+                          "seed": args.faults_seed, "kv_swap": args.kv_swap}
+                         if args.ber is not None or args.fault_every
+                         else None),
                "policies": records}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -388,6 +388,25 @@ class ColdStore:
         self.bytes_used -= n_bytes
         return tree, n_rows
 
+    def get(self, key: Any) -> tuple[Any, int]:
+        """Peek ``(tree, n_rows)`` without removing — the keep-in-store
+        read (a restored block retained as a recovery copy)."""
+        tree, n_rows, _, _ = self._blocks[key]
+        return tree, n_rows
+
+    def unpin(self, key: Any) -> None:
+        """Make a pinned block LRU-evictable: a restored victim's retained
+        recovery copy is best-effort, and must not strand row budget."""
+        tree, n_rows, n_bytes, _ = self._blocks[key]
+        self._blocks[key] = (tree, n_rows, n_bytes, False)
+
+    def pin(self, key: Any) -> None:
+        """Make a block eviction-proof again: a retained recovery copy the
+        scheduler has committed to restoring from must not vanish under an
+        LRU pass before the owner is re-admitted."""
+        tree, n_rows, n_bytes, _ = self._blocks[key]
+        self._blocks[key] = (tree, n_rows, n_bytes, True)
+
     def drop(self, key: Any) -> bool:
         if key not in self._blocks:
             return False

@@ -112,3 +112,43 @@ def tier_transfer(n_bytes: int, cfg: PlaneConfig | None = None,
     t_in = (P.CMD_OVERHEAD_S + rounds * t_read(slc_variant(cfg))
             + n_bytes / P.FLASH_BUS_BPS)
     return TierTransfer(n_bytes=int(n_bytes), pages=pages, t_out=t_out, t_in=t_in)
+
+
+# ----------------------------------------------------------------------------
+# on-die ECC decode (SLC-resident KV / weight reads)
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EccCost:
+    """Modeled cost of one on-die BCH decode pass over ``n_bytes`` read
+    from the SLC tier.
+
+    Every 256 B page pays a syndrome computation
+    (``ECC_SYNDROME_CYCLES_PER_PAGE`` at the RPU clock, pipelined behind
+    the Eq. (1) page read); each corrected bit additionally pays the
+    error-locator/Chien-search term ``ECC_CYCLES_PER_CORRECTED_BIT``.
+    Pages with more than ``ECC_T_PER_PAGE`` raw flips are uncorrectable
+    — no cost model applies; the read surfaces an integrity fault to the
+    serving stack instead (serve/faults.py).
+    """
+
+    n_bytes: int
+    pages: int
+    corrected_bits: int
+    t_decode: float
+
+    @property
+    def cycles(self) -> int:
+        """``t_decode`` at the RPU clock (Table I)."""
+        return int(round(self.t_decode * P.RPU_CLOCK_HZ))
+
+
+def ecc_decode(n_bytes: int, corrected_bits: int = 0) -> EccCost:
+    """Cost entry point for one ECC decode of ``n_bytes`` of SLC data."""
+    if n_bytes <= 0:
+        return EccCost(n_bytes=0, pages=0, corrected_bits=0, t_decode=0.0)
+    pages = -(-n_bytes // P.PAGE_BYTES)
+    cycles = (pages * P.ECC_SYNDROME_CYCLES_PER_PAGE
+              + int(corrected_bits) * P.ECC_CYCLES_PER_CORRECTED_BIT)
+    return EccCost(n_bytes=int(n_bytes), pages=pages,
+                   corrected_bits=int(corrected_bits),
+                   t_decode=cycles / P.RPU_CLOCK_HZ)

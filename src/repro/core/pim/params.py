@@ -100,6 +100,22 @@ PE_CYCLES_SLC: float = 10e3            # nominal SLC P/E cycles
 RETENTION_RELAX_FACTOR: float = 50.0   # 3-day retention endurance gain ([17])
 PAGE_BYTES: int = 256                  # Table I: page size = 256 B
 
+# SLC raw bit-error rates and on-die ECC ([17]-class SLC reliability data;
+# Cambricon-LLM makes the same on-die error handling load-bearing for
+# NAND-resident LLM state).  Retention errors accumulate while a cold
+# block rests (the 3-day relaxed-retention operating point the
+# RETENTION_RELAX_FACTOR endurance gain assumes); read disturb is the
+# per-pass rate on hot SLC pages.  The ECC is a BCH-class code over each
+# 256 B page: up to ECC_T_PER_PAGE flipped bits correct transparently
+# (syndrome pass pipelined behind the Eq. (1) page read, plus an
+# error-locator/Chien-search term per corrected bit at the RPU clock);
+# a page beyond t is uncorrectable and surfaces to the serving stack.
+RBER_SLC_RETENTION: float = 5e-7       # resting cold blocks [bit errors/bit]
+RBER_SLC_READ_DISTURB: float = 1e-8    # per read pass on a hot SLC page
+ECC_T_PER_PAGE: int = 8                # BCH correction capability t / 256 B page
+ECC_SYNDROME_CYCLES_PER_PAGE: int = 64   # syndrome computation per page
+ECC_CYCLES_PER_CORRECTED_BIT: int = 128  # error locator + Chien search per bit
+
 
 @dataclasses.dataclass(frozen=True)
 class PlaneConfig:

@@ -67,6 +67,7 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 from repro.models.transformer import Runtime
 from repro.serve.engine import ContinuousBatchingEngine, Engine
+from repro.serve.faults import FaultInjector
 
 
 def make_serve_runtime(spec: str | None) -> Runtime:
@@ -144,6 +145,47 @@ def _print_swap_stats(eng):
           f"cold_rows={eng._swap.store.rows_used}/{eng._swap.store.row_budget}")
 
 
+def _make_faults(args):
+    """CLI flags -> a seeded FaultInjector (or None when chaos is off)."""
+    on = (args.faults or args.ber is not None or args.fault_steps
+          or args.slot_loss or args.fault_every)
+    if not on:
+        return None
+    losses = []
+    for spec in (args.slot_loss or "").split(","):
+        if spec:
+            step, slot = (int(s) for s in spec.split(":"))
+            losses.append((step, slot))
+    return FaultInjector(
+        seed=args.fault_seed,
+        ber=args.ber,
+        mode=args.fault_mode,
+        step_fail_at=tuple(int(s) for s in (args.fault_steps or "").split(",")
+                           if s),
+        step_fail_every=args.fault_every,
+        slot_loss_at=tuple(losses))
+
+
+def _print_fault_stats(eng):
+    if eng._injector is None and not eng._faults_on:
+        return
+    s = eng.stats
+    print(f"faults: ecc={s.get('ecc_checks', 0)}chk"
+          f"/{s.get('ecc_pages', 0)}pg"
+          f"/{s.get('ecc_cycles', 0)}cyc "
+          f"corrected_bits={s.get('ecc_corrected_bits', 0)} "
+          f"flips={s.get('bitflips_injected', 0)} "
+          f"uncorrectable={s.get('uncorrectable_blocks', 0)} "
+          f"cold_rereads={s.get('cold_rereads', 0)} "
+          f"recomputes={s.get('recovery_recomputes', 0)} "
+          f"step_failures={s['step_failures']} "
+          f"retries={s['step_retries']} "
+          f"pool_rebuilds={s['pool_rebuilds']} "
+          f"slot_losses={s.get('slot_losses', 0)} "
+          f"quarantined={s.get('quarantined_slots', 0)} "
+          f"timeouts={s['timeouts']} slow_steps={s['slow_steps']}")
+
+
 def _run_continuous(cfg, params, args):
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 1
@@ -162,12 +204,15 @@ def _run_continuous(cfg, params, args):
                                    prefix_cache_rows=args.prefix_rows,
                                    kv_swap=args.kv_swap,
                                    cold_rows=args.cold_rows,
-                                   drain_stall_limit=args.drain_stall_limit)
+                                   drain_stall_limit=args.drain_stall_limit,
+                                   faults=_make_faults(args),
+                                   max_step_retries=args.max_step_retries)
     prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
     t0 = time.perf_counter()
-    reqs = [eng.submit(p, m, temperature=args.temperature, top_k=args.top_k)
+    reqs = [eng.submit(p, m, temperature=args.temperature, top_k=args.top_k,
+                       deadline_s=args.deadline)
             for p, m in zip(prompts, budgets)]
     eng.drain()
     wall = time.perf_counter() - t0
@@ -197,6 +242,7 @@ def _run_continuous(cfg, params, args):
               f"fused_tokens={eng.stats['multi_tokens']}")
     _print_prefix_stats(eng)
     _print_swap_stats(eng)
+    _print_fault_stats(eng)
     steps = max(1, eng.stats["steps"])
     print(f"host {1e3 * (eng.stats['step_s'] - eng.stats['device_s']) / steps:.2f} ms/step  "
           f"device {1e3 * eng.stats['device_s'] / steps:.2f} ms/step  "
@@ -208,7 +254,7 @@ def _run_serve(cfg, params, args):
     """Async streaming demo: submit ``--requests`` live, stream them
     concurrently, cancel the second one after its first two tokens, and
     shut down cleanly.  Doubles as the CI smoke for the serve loop."""
-    from repro.serve.server import AsyncServer
+    from repro.serve.server import AsyncServer, RequestTimedOut
 
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 1
@@ -227,7 +273,9 @@ def _run_serve(cfg, params, args):
                                    prefix_cache_rows=args.prefix_rows,
                                    kv_swap=args.kv_swap,
                                    cold_rows=args.cold_rows,
-                                   drain_stall_limit=args.drain_stall_limit)
+                                   drain_stall_limit=args.drain_stall_limit,
+                                   faults=_make_faults(args),
+                                   max_step_retries=args.max_step_retries)
     prompts = _make_prompts(cfg, args, rng)
     budgets = [int(rng.integers(max(1, args.steps // 2), args.steps + 1))
                for _ in range(args.requests)]
@@ -237,17 +285,21 @@ def _run_serve(cfg, params, args):
 
     async def consume(i, stream):
         toks = []
-        async for tok in stream:
-            toks.append(tok)
-            if i == cancel_at and len(toks) >= 2:
-                stream.cancel()
+        try:
+            async for tok in stream:
+                toks.append(tok)
+                if i == cancel_at and len(toks) >= 2:
+                    stream.cancel()
+        except RequestTimedOut:
+            pass                      # deadline hit; partial tokens stand
         return toks
 
     async def demo():
         t0 = eng.now()
         async with AsyncServer(eng, stream_buffer=args.stream_buffer) as srv:
             streams = [await srv.submit(p, m, temperature=args.temperature,
-                                        top_k=args.top_k)
+                                        top_k=args.top_k,
+                                        deadline_s=args.deadline)
                        for p, m in zip(prompts, budgets)]
             outs = await asyncio.gather(*(consume(i, s)
                                           for i, s in enumerate(streams)))
@@ -265,6 +317,7 @@ def _run_serve(cfg, params, args):
           f"steps={eng.stats['steps']} preemptions={eng.stats['preemptions']}")
     _print_prefix_stats(eng)
     _print_swap_stats(eng)
+    _print_fault_stats(eng)
     assert all(s.request.done for s in streams)
     assert not eng.scheduler.has_work() and not eng._carries
     if cancel_at is not None:
@@ -333,6 +386,33 @@ def main():
     ap.add_argument("--drain-stall-limit", type=int, default=8,
                     help="consecutive no-progress drain() iterations before "
                          "the engine raises instead of spinning")
+    ap.add_argument("--faults", action="store_true",
+                    help="enable the fault-tolerance layer (checksums + ECC "
+                         "metering) even with no injected faults")
+    ap.add_argument("--ber", type=float, default=None,
+                    help="cold-store raw bit error rate for injected NAND "
+                         "bit-flips (default: the params.py rate for "
+                         "--fault-mode)")
+    ap.add_argument("--fault-mode", default="retention",
+                    choices=("retention", "read_disturb"),
+                    help="which SLC error mechanism sets the default BER")
+    ap.add_argument("--fault-steps", default=None, metavar="S1,S2",
+                    help="inject transient device failures at these engine "
+                         "steps (comma-separated; consumes the donated pool)")
+    ap.add_argument("--fault-every", type=int, default=0, metavar="N",
+                    help="inject a transient device failure every N engine "
+                         "steps (0 = off)")
+    ap.add_argument("--slot-loss", default=None, metavar="STEP:SLOT,...",
+                    help="permanently lose (quarantine) decode slots at the "
+                         'given steps, e.g. "12:0,40:2"')
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault injector")
+    ap.add_argument("--max-step-retries", type=int, default=3,
+                    help="bounded retries (with pool rebuild) after a failed "
+                         "jitted step before the engine gives up")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="per-request deadline; requests still unfinished "
+                         "this long after arrival finish as TIMEOUT")
     ap.add_argument("--multi-step", type=int, default=1, metavar="M",
                     help="fused multi-step decode: run M greedy iterations "
                          "per jitted call (argmax fed back on device) when "

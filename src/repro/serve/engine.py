@@ -73,8 +73,12 @@ from repro.core import kvcache as KV
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.transformer import Runtime
+from repro.ft.failures import StragglerWatchdog
 from repro.serve.drafter import (Drafter, chain_parents, make_drafter,
                                  tree_depths_ancestors)
+from repro.serve.faults import (ColdBlockCorrupt, FaultInjector,
+                                FaultTolerance, InjectedStepFailure,
+                                PoolConsumedError)
 from repro.serve.quantize import quantize_tree
 from repro.serve.scheduler import (Request, RequestState, Scheduler,
                                    SchedulingPolicy)
@@ -231,7 +235,11 @@ class ContinuousBatchingEngine:
                  prefix_cache_rows: int | None = None,
                  kv_swap: bool = False,
                  cold_rows: int | None = None,
-                 drain_stall_limit: int = 8):
+                 drain_stall_limit: int = 8,
+                 faults: "FaultInjector | bool | None" = None,
+                 max_step_retries: int = 3,
+                 retry_backoff_s: float = 0.02,
+                 watchdog_factor: float = 8.0):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching targets decoder-only LMs")
@@ -331,6 +339,19 @@ class ContinuousBatchingEngine:
                 swap_budget,
                 jax.eval_shape(T.read_slot, self.state, jnp.int32(0)),
                 replay_tpot_s=replay_tpot)
+        # fault tolerance (DESIGN §1j): the injector is the chaos source
+        # (faults=True turns on detection/metering with no injection), the
+        # FaultTolerance layer owns cold-block checksums + the metered ECC
+        # pipeline, and the retry/rebuild machinery lives in step().
+        self._injector = faults if isinstance(faults, FaultInjector) else None
+        self._faults_on = bool(faults)
+        self._ft = None                   # built after the stats dict below
+        if max_step_retries < 0:
+            raise ValueError("max_step_retries must be >= 0")
+        self.max_step_retries = int(max_step_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._watchdog = StragglerWatchdog(factor=watchdog_factor)
+        self._state_sharding = None       # set by _shard_over_mesh
         self._last_tok = np.zeros((n_slots,), np.int32)
         self._slot_pos = np.zeros((n_slots,), np.int64)   # host cursor mirror
         self._carries: dict[int, Any] = {}        # slot -> prefill carry
@@ -349,7 +370,12 @@ class ContinuousBatchingEngine:
                       "verify_steps": 0, "spec_drafted": 0,
                       "spec_accepted": 0, "multi_blocks": 0,
                       "multi_tokens": 0, "xfer_bytes": 0,
-                      "decode_xfer_bytes": 0, "device_s": 0.0, "step_s": 0.0}
+                      "decode_xfer_bytes": 0, "device_s": 0.0, "step_s": 0.0,
+                      # recovery machinery is always armed (a donated step
+                      # can genuinely fail with no injector), so these
+                      # counters always exist
+                      "timeouts": 0, "slow_steps": 0, "step_failures": 0,
+                      "step_retries": 0, "pool_rebuilds": 0}
         if self._pcache is not None:
             # keys exist only when the cache is on so downstream record
             # schemas stay backward-compatible (absent, not null, when off)
@@ -361,6 +387,18 @@ class ContinuousBatchingEngine:
                                "swap_out_bytes": 0, "swap_in_bytes": 0,
                                "swap_out_cycles": 0, "swap_in_cycles": 0,
                                "preempt_swaps": 0, "preempt_recomputes": 0})
+        if self._faults_on:
+            # absent-when-off, like the prefix/swap keys: the FT layer's
+            # ECC metering and recovery-path counters
+            self.stats.update({"ecc_checks": 0, "ecc_pages": 0,
+                               "ecc_cycles": 0, "ecc_corrected_bits": 0,
+                               "bitflips_injected": 0,
+                               "uncorrectable_blocks": 0, "cold_rereads": 0,
+                               "recovery_recomputes": 0, "slot_losses": 0,
+                               "quarantined_slots": 0})
+            self._ft = FaultTolerance(self.stats, self._injector)
+            if self._swap is not None:
+                self._swap.attach_faults(self._ft)
         if self._pcache is not None and self._swap is not None:
             # LRU pressure demotes prefix leaves to the cold tier instead
             # of dropping them; store evictions relay back as drop_cold
@@ -456,6 +494,7 @@ class ContinuousBatchingEngine:
         ssh = SH.decode_state_shardings(
             cfg, pool_shape, jax.eval_shape(lambda: self.state), mesh)
         self.state = jax.device_put(self.state, ssh)
+        self._state_sharding = ssh        # pool rebuild re-lands here
         self._io = SH.serve_step_shardings(self.n_slots, mesh)
         self._io["pos"] = NamedSharding(mesh, P())
         if self._swap is not None:
@@ -549,17 +588,20 @@ class ContinuousBatchingEngine:
                arrival_time: float | None = None, *,
                priority: int = 0, user: str | None = None,
                temperature: float = 0.0, top_k: int | None = None,
-               seed: int | None = None) -> Request:
+               seed: int | None = None,
+               deadline_s: float | None = None) -> Request:
         if temperature < 0:
             raise ValueError("temperature must be >= 0 (0 = greedy)")
         if top_k is not None and top_k < 1:
             raise ValueError("top_k must be >= 1")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 when set")
         req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       arrival_time=(self._now() if arrival_time is None
                                     else arrival_time),
                       priority=priority, user=user, temperature=temperature,
-                      top_k=top_k, seed=seed)
+                      top_k=top_k, seed=seed, deadline_s=deadline_s)
         self._next_rid += 1
         self.scheduler.submit(req)
         return req
@@ -842,6 +884,11 @@ class ContinuousBatchingEngine:
         key = self._pcache.promote(leaf)
         try:
             blob, rows, cost = self._swap.swap_in(key)
+        except ColdBlockCorrupt:
+            # tier-crossing detection: the demoted leaf rotted in the cold
+            # store (uncorrectable bit-flips).  The block is already
+            # dropped; a cold prefill recomputes the same rows exactly.
+            return 0
         except KeyError:                  # pragma: no cover - guard
             return 0
         one = jax.tree.map(
@@ -888,11 +935,20 @@ class ContinuousBatchingEngine:
         'Array has been deleted' on the next decode step.  Compile-time
         and pre-dispatch failures (the common cases) never consume the
         donated buffer, so they keep the per-request isolation."""
-        if jax.tree.leaves(self.state)[0].is_deleted():
-            raise RuntimeError(
+        if self._pool_consumed():
+            raise PoolConsumedError(
                 "the decode pool was consumed by a failed donated write; "
                 "the engine cannot continue serving its residents"
             ) from cause
+
+    def _pool_consumed(self) -> bool:
+        return jax.tree.leaves(self.state)[0].is_deleted()
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Increment a stats counter only when it exists (the recovery
+        machinery is always armed; its FT-only counters are not)."""
+        if key in self.stats:
+            self.stats[key] += n
 
     def _preempt(self, req: Request, now: float) -> None:
         """Bump a resident back to the queue.  With the tiered pool on,
@@ -947,13 +1003,44 @@ class ContinuousBatchingEngine:
     def _admit_swapped(self, req: Request) -> None:
         """Re-admission of a swap-preempted victim: swap its cold block in,
         land it in the assigned slot with the donating ``write_slot``, and
-        resume DECODING directly — no prefill, no replay.  The restored
-        rows are byte-identical to the ones that left, so the continuation
-        is token-identical to an unpreempted run."""
+        resume DECODING — no prefill; replay only the tokens recorded after
+        the block's committed rows (a fresh preemption block carries all of
+        them, so the replay window is empty; a *stale* recovery copy — slot
+        loss after more decode — re-feeds the tail).  Restored rows are
+        byte-identical to the ones that left, so the continuation is
+        token-identical to an unpreempted run.
+
+        With the FT layer on, the read crosses the ECC + checksum pipeline;
+        an uncorrectable block falls back to deterministic recompute-replay
+        in this same admission (the request re-prefills from scratch and
+        replays every recorded token — token-identical by the replay
+        discipline).  Greedy requests keep the block in the store as a
+        recovery copy (``keep=True``); sampled requests must not restore
+        from a stale copy (tail replay would re-consume RNG draws the live
+        stream already used), so they pop it like before.
+
+        Returns True when the request was handled here (restored, or
+        failed hard); False tells the caller to fall through to the
+        normal recompute admission path."""
         n = req.swapped_rows
         req.swapped_rows = 0
+        keep = self._ft is not None and req.temperature <= 0
         try:
-            blob, rows, cost = self._swap.swap_in(("req", req.rid))
+            blob, rows, cost = self._swap.swap_in(("req", req.rid),
+                                                  keep=keep)
+        except (ColdBlockCorrupt, KeyError):
+            # uncorrectable block, or an unpinned recovery copy the store
+            # LRU-evicted after the scheduler elected a cold re-read —
+            # both recoverable: fall back to recompute-replay
+            self._bump("recovery_recomputes")
+            self._rngs.pop(req.rid, None)  # replay re-consumes the stream
+            req.prefill_pos = 0
+            req.replay_pos = 0
+            return False
+        except Exception as e:                        # noqa: BLE001
+            self._fail(req, f"{type(e).__name__}: {e}")
+            return True
+        try:
             one = jax.tree.map(
                 lambda a: self._push(np.asarray(a),
                                      self._io and self._io["swap_row"]),
@@ -963,18 +1050,23 @@ class ContinuousBatchingEngine:
         except Exception as e:                        # noqa: BLE001
             self._fail(req, f"{type(e).__name__}: {e}")
             self._check_pool_alive(e)
-            return
+            return True
         assert rows == n, f"cold block rows {rows} != ledger {n}"
         self.stats["swap_ins"] += 1
         self.stats["swap_in_bytes"] += cost.n_bytes
         self.stats["swap_in_cycles"] += cost.cycles_in
+        fed = rows - req.prompt_len       # output tokens already in the rows
+        assert 0 <= fed < len(req.output), \
+            f"cold rows {rows} outside prompt {req.prompt_len} + " \
+            f"output {len(req.output)}"
         req.prefill_pos = req.prompt_len
-        req.replay_pos = len(req.output)
+        req.replay_pos = fed + 1
         req.state = RequestState.DECODING
-        self._last_tok[req.slot] = req.output[-1]
+        self._last_tok[req.slot] = req.output[fed]
         self._slot_pos[req.slot] = rows
         if (self.spec_k or self.spec_tree) and self._h_last is not None:
             self._h_last[req.slot] = 0.0  # MTP head free-runs post-restore
+        return True
 
     def _demote_leaf_rows(self, slot: int, n_rows: int, key) -> bool:
         """Prefix-cache demotion hook: move an LRU-evicted leaf's rows to
@@ -1000,6 +1092,10 @@ class ContinuousBatchingEngine:
             # slot (appends clamp to >= state_len - T >= max_len - 1)
             publish = min(int(self._slot_pos[req.slot]), self.max_len - 1)
         self.scheduler.retire(req, now, publish_rows=publish)
+        if self._swap is not None:
+            # a retained recovery copy (FT keep-on-restore) dies with the
+            # request; without one this is a no-op
+            self._swap.drop(("req", req.rid))
         if self._pcache is not None:
             self.stats["cached_tokens"] = self._pcache.cached_rows
         self._rngs.pop(req.rid, None)     # release the per-request sampler
@@ -1043,14 +1139,131 @@ class ContinuousBatchingEngine:
             did = True
         return did
 
+    # -- fault recovery (DESIGN §1j) ---------------------------------------
+    def _apply_deadlines(self, now: float) -> None:
+        """Terminal TIMEOUT for any request past its ``deadline_s`` budget
+        (queued or resident) — slot/carry/cold-block hygiene mirrors a
+        cancel, the partial output is kept."""
+        for req in (list(self.scheduler.queue)
+                    + list(self.scheduler.active.values())):
+            if req.deadline_s is None or req.done:
+                continue
+            if now - req.arrival_time < req.deadline_s:
+                continue
+            if req.slot is not None:
+                self._carries.pop(req.slot, None)
+            if self._swap is not None:
+                self._swap.drop(("req", req.rid))
+            self.scheduler.timeout(req, now)
+            self._rngs.pop(req.rid, None)
+            self.stats["timeouts"] += 1
+
+    def _recover_resident(self, req: Request, now: float) -> None:
+        """Move a resident off a dead pool/slot while keeping its stream
+        token-identical: a greedy resident with a retained cold copy
+        re-enters the queue as a swap restore (possibly-stale rows + tail
+        replay — greedy-only, a sampled tail replay would re-consume RNG
+        draws the live stream already used); everything else
+        recompute-replays from scratch."""
+        self._carries.pop(req.slot, None)
+        key = ("req", req.rid)
+        if (self._swap is not None and req.temperature <= 0
+                and req.output and self._swap.has(key)):
+            rows = self._swap.store.rows_of(key)
+            fed = rows - req.prompt_len
+            if 0 <= fed < len(req.output):
+                # the copy is load-bearing until re-admission: re-pin it so
+                # an LRU pass can't evict it out from under the ledger
+                self._swap.store.pin(key)
+                self.scheduler.preempt(req, now, swapped_rows=rows)
+                self._bump("cold_rereads")
+                return
+            self._swap.drop(key)          # ledger-inconsistent copy
+        self._rngs.pop(req.rid, None)     # replay re-consumes the stream
+        self.scheduler.preempt(req, now, swapped_rows=0)
+        self._bump("recovery_recomputes")
+
+    def _lose_slot(self, slot: int, now: float) -> None:
+        """Whole plane/slot loss: recover the resident (cold re-read or
+        recompute-replay), drop any cached leaf rows living there, and
+        quarantine the slot for good.  Fatal only once no healthy slot
+        remains (``Scheduler.quarantine_slot`` raises)."""
+        if slot in self.scheduler.quarantined or not 0 <= slot < self.n_slots:
+            return
+        self._bump("slot_losses")
+        req = self.scheduler.active.get(slot)
+        if req is not None:
+            self._recover_resident(req, now)
+        if self._pcache is not None:
+            self._pcache.drop_slot(slot)
+        self.scheduler.quarantine_slot(slot)
+        if "quarantined_slots" in self.stats:
+            self.stats["quarantined_slots"] = len(self.scheduler.quarantined)
+
+    def _rebuild_pool(self) -> None:
+        """Rebuild the donated decode pool from committed host state after
+        a failed donated step consumed it.  Every resident preempts off
+        the dead pool (cold re-read when a recovery copy exists, else
+        recompute-replay — token-identical either way), in-flight float
+        carries are dropped (they died with the pool), hot prefix-cache
+        leaves are dropped (their rows are gone; demoted *cold* leaves
+        survive — they live host-side), and a fresh pool lands with the
+        original shardings.  The slot ledger stays balanced: every slot
+        ends either free or quarantined."""
+        now = self._now()
+        self.stats["pool_rebuilds"] += 1
+        self._carries.clear()
+        for slot, req in sorted(list(self.scheduler.active.items())):
+            self._recover_resident(req, now)
+        if self._pcache is not None:
+            self._pcache.drop_hot()
+        state = M.init_decode_state(self.cfg, self.n_slots, self._state_len)
+        if self._state_sharding is not None:
+            state = jax.device_put(state, self._state_sharding)
+        self.state = state
+        self._slot_pos[:] = 0
+        self._last_tok[:] = 0
+        if (self.spec_k or self.spec_tree) and self._h_last is not None:
+            self._h_last[:] = 0.0
+
     # -- one serving iteration --------------------------------------------
     def step(self) -> bool:
-        """Run one engine iteration; returns True if any work was done."""
+        """Run one engine iteration; returns True if any work was done.
+
+        Transient device errors are survived here (DESIGN §1j): a step
+        that consumed the donated pool (a failed donated call — injected
+        or real) triggers bounded retry-with-backoff, each attempt first
+        rebuilding a fresh pool from committed host state
+        (:meth:`_rebuild_pool` — residents preempt to the cold tier or
+        recompute-replay, so recovered streams stay token-identical).
+        Anything else, and retry exhaustion, propagates.  A step-latency
+        watchdog (``ft.failures.StragglerWatchdog``) flags straggling
+        iterations in ``stats["slow_steps"]``."""
         t0 = time.perf_counter()
         try:
-            return self._step()
+            attempt = 0
+            while True:
+                try:
+                    return self._step()
+                except Exception as e:                # noqa: BLE001
+                    if not (isinstance(e, InjectedStepFailure)
+                            or self._pool_consumed()):
+                        raise
+                    self.stats["step_failures"] += 1
+                    if attempt >= self.max_step_retries:
+                        raise RuntimeError(
+                            f"engine step failed {attempt + 1} time(s); "
+                            "retry budget exhausted") from e
+                    if self.retry_backoff_s > 0:
+                        time.sleep(self.retry_backoff_s * (2.0 ** attempt))
+                    attempt += 1
+                    self.stats["step_retries"] += 1
+                    self._rebuild_pool()
         finally:
-            self.stats["step_s"] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats["step_s"] += dt
+            if self._watchdog.observe(self.stats["steps"], dt):
+                self.stats["slow_steps"] += 1
 
     def _step(self) -> bool:
         now = self._now()
@@ -1062,6 +1275,10 @@ class ContinuousBatchingEngine:
                     and req.replay_pos >= len(req.output)
                     and req.should_stop()):
                 self._retire(req, now)
+        self._apply_deadlines(now)
+        if self._injector is not None:
+            for slot in self._injector.lost_slots(self.stats["steps"]):
+                self._lose_slot(slot, now)
         # preemption: only meaningful when the queue is blocked on slots —
         # and a reclaimable prefix-cache leaf means it is not blocked
         # (admission evicts LRU cache rows before any resident is bumped)
@@ -1072,9 +1289,12 @@ class ContinuousBatchingEngine:
         for req in self.scheduler.admit(now):
             if req.swapped_rows:
                 # swap-preempted victim: restore its rows from the cold
-                # tier and resume decoding — both engine flavours
-                self._admit_swapped(req)
-            elif self.chunk:
+                # tier and resume decoding — both engine flavours.  False
+                # = the block was uncorrectably corrupt; fall through to
+                # the recompute admission below (token-identical replay)
+                if self._admit_swapped(req) or req.done:
+                    continue
+            if self.chunk:
                 # exception-safe like _admit_atomic: a failed carry
                 # allocation fails one request, never leaks the slot
                 try:
@@ -1117,6 +1337,15 @@ class ContinuousBatchingEngine:
         if not dec:
             return step_pf > 0 or cancelled
         self.stats["decode_steps"] += 1
+        if (self._injector is not None
+                and self._injector.fail_step(self.stats["steps"])):
+            # a transient device error mid-step consumes the donated pool
+            # exactly like a real failed donated call would; step()'s
+            # retry loop rebuilds from committed host state
+            for leaf in jax.tree.leaves(self.state):
+                leaf.delete()
+            raise InjectedStepFailure(
+                f"injected device error at step {self.stats['steps']}")
         if self.spec_tree:
             self._spec_tree_decode(dec)
             return True
@@ -1494,11 +1723,16 @@ class ContinuousBatchingEngine:
         while self.scheduler.has_work():
             stalls = 0 if self.step() else stalls + 1
             if stalls >= self.drain_stall_limit:
-                pending = ([r.rid for r in self.scheduler.queue]
-                           + [r.rid for r in self.scheduler.active.values()])
+                def _desc(r: Request) -> str:
+                    where = f"@slot{r.slot}" if r.slot is not None else ""
+                    return f"rid={r.rid}:{r.state.value}{where}"
+                stuck = ([_desc(r) for r in self.scheduler.queue]
+                         + [_desc(r) for r in
+                            self.scheduler.active.values()])
                 raise RuntimeError(
                     f"drain() stalled: {stalls} consecutive iterations did "
-                    f"no work but requests {pending} are still pending")
+                    f"no work but {len(stuck)} request(s) are still "
+                    f"pending [{', '.join(stuck)}]")
 
     def generate_all(self, prompts: list[list[int]],
                      max_new_tokens: int | list[int],

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core import kvcache as KV
 from repro.core.pim import latency as L
 from repro.core.pim.params import PlaneConfig
+from repro.serve.faults import ColdBlockCorrupt, FaultTolerance
 
 
 def _is_seq_block(b: Any) -> bool:
@@ -67,6 +68,7 @@ class SwapManager:
         self.store = KV.ColdStore(cold_rows)
         self._template = template
         self._plane = plane
+        self._ft: FaultTolerance | None = None
         self.replay_tpot_s = replay_tpot_s
         self.row_bytes = 0        # payload bytes per live sequence row
         self.fixed_bytes = 0      # fixed-size (SSM) state per block
@@ -80,6 +82,14 @@ class SwapManager:
                     self.fixed_bytes += sum(
                         int(np.prod(x.shape)) * x.dtype.itemsize
                         for x in jax.tree.leaves(b))
+
+    def attach_faults(self, ft: FaultTolerance) -> None:
+        """Wire the fault-tolerance layer in: ``swap_out`` records per-row
+        checksums over the clean block, ``swap_in`` routes the read
+        through the metered ECC + checksum pipeline (raising
+        :class:`ColdBlockCorrupt` on an uncorrectable block, which is
+        dropped first), and ``drop``/LRU eviction forget the sums."""
+        self._ft = ft
 
     # -- cost model --------------------------------------------------------
     def block_bytes(self, n_rows: int) -> int:
@@ -152,21 +162,47 @@ class SwapManager:
         plain leaf drop)."""
         blob = self.truncate(one, int(n_rows))
         ok, evicted = self.store.put(key, blob, int(n_rows), pinned=pinned)
+        if self._ft is not None:
+            for k in evicted:
+                self._ft.forget(k)
+            if ok:
+                self._ft.note_write(key, blob)
         cost = self.transfer_cost(KV.cache_bytes(blob) if ok else 0)
         return ok, evicted, cost
 
-    def swap_in(self, key: Any) -> tuple[dict, int, L.TierTransfer]:
+    def swap_in(self, key: Any, *, keep: bool = False
+                ) -> tuple[dict, int, L.TierTransfer]:
         """Pop a cold block and rebuild the pool-shaped row: the engine
         lands it with ``write_slot``.  Raises ``KeyError`` on a missing
         block (a dropped/cancelled key) — callers treat that as a failed
-        admission."""
-        blob, n_rows = self.store.pop(key)
+        admission.  ``keep=True`` leaves the block in the store after a
+        verified read, unpinned and LRU-evictable: the fault-tolerance
+        layer's recovery copy for greedy requests (DESIGN §1j).  With the
+        FT layer attached the read flows through the ECC + checksum
+        pipeline and an uncorrectable block raises
+        :class:`ColdBlockCorrupt` (dropped first)."""
+        if keep:
+            blob, n_rows = self.store.get(key)
+        else:
+            blob, n_rows = self.store.pop(key)
+        if self._ft is not None:
+            try:
+                blob = self._ft.read_block(key, blob)
+            except ColdBlockCorrupt:
+                if keep:
+                    self.store.drop(key)
+                raise
+        if keep:
+            self.store.unpin(key)
+            self.store.touch(key)
         cost = self.transfer_cost(KV.cache_bytes(blob))
         return self.pad(blob), n_rows, cost
 
     def drop(self, key: Any) -> bool:
         """Discard a cold block (cancel/fail of a swapped-out request, or
         a demoted leaf whose trie entry died).  Idempotent."""
+        if self._ft is not None:
+            self._ft.forget(key)
         return self.store.drop(key)
 
     def has(self, key: Any) -> bool:

@@ -470,6 +470,28 @@ class RadixPrefixCache:
         slot = self._evict(protected, reclaim=True, demote=False)
         return slot, n_match
 
+    def drop_slot(self, slot: int) -> bool:
+        """Fault path (lost plane — serve/faults.py): the rows on ``slot``
+        are gone, so a claim-only leaf living there is dropped outright —
+        no demotion, there is nothing valid to swap out.  Returns True
+        when a leaf was dropped."""
+        leaf = self._slots.get(slot)
+        if leaf is None or self.ledger.count(slot) != 1:
+            return False
+        self._evict(leaf, demote=False)
+        return True
+
+    def drop_hot(self) -> int:
+        """Fault path (pool rebuild): every hot leaf's rows died with the
+        donated pool, so all claim-only leaves drop (slots return through
+        the free callback).  Cold (demoted) leaves survive — their blocks
+        live host-side and promote as usual.  Returns the drop count."""
+        n = 0
+        for leaf in list(self._evictable()):
+            self._evict(leaf, demote=False)
+            n += 1
+        return n
+
     def clear(self) -> int:
         """Evict every claim-only leaf (slots return through the free
         callback) and drop every cold leaf (blocks discarded from the

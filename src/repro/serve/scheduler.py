@@ -65,6 +65,7 @@ class RequestState(enum.Enum):
     DECODING = "decoding"
     FINISHED = "finished"
     CANCELLED = "cancelled"
+    TIMEOUT = "timeout"
 
 
 @dataclasses.dataclass
@@ -80,6 +81,8 @@ class Request:
     temperature: float = 0.0              # 0 = greedy argmax
     top_k: Optional[int] = None           # restrict sampling to top-k logits
     seed: Optional[int] = None            # per-request sampling seed
+    deadline_s: Optional[float] = None    # wall budget from arrival; the
+    #   engine times the request out (terminal TIMEOUT) once exceeded
 
     # filled in by the scheduler / engine
     state: RequestState = RequestState.QUEUED
@@ -103,11 +106,16 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.state in (RequestState.FINISHED, RequestState.CANCELLED)
+        return self.state in (RequestState.FINISHED, RequestState.CANCELLED,
+                              RequestState.TIMEOUT)
 
     @property
     def cancelled(self) -> bool:
         return self.state is RequestState.CANCELLED
+
+    @property
+    def timed_out(self) -> bool:
+        return self.state is RequestState.TIMEOUT
 
     @property
     def remaining_work(self) -> int:
@@ -320,6 +328,7 @@ class Scheduler:
         self.free_slots: list[int] = list(range(n_slots))   # min-heap
         heapq.heapify(self.free_slots)
         self.active: dict[int, Request] = {}                # slot -> request
+        self.quarantined: set[int] = set()       # dead planes — never reused
         self.prefix_cache = None                 # set via attach_prefix_cache
 
     # -- prefix cache ------------------------------------------------------
@@ -332,7 +341,13 @@ class Scheduler:
         writer hold, never leak onto the free heap while the leaf still
         claims its rows)."""
         self.prefix_cache = cache
-        cache._free = lambda slot: heapq.heappush(self.free_slots, slot)
+        cache._free = self._push_free
+
+    def _push_free(self, slot: int) -> None:
+        """Single gate onto the free heap: a quarantined slot (lost plane)
+        never comes back into rotation."""
+        if slot not in self.quarantined:
+            heapq.heappush(self.free_slots, slot)
 
     def _free_slot(self, slot: int) -> None:
         """Refcount-aware slot free: an alias-held slot drops its writer
@@ -342,7 +357,35 @@ class Scheduler:
         if cache is not None and cache.manages(slot):
             cache.release_writer(slot)
         else:
-            heapq.heappush(self.free_slots, slot)
+            self._push_free(slot)
+
+    # -- fault tolerance ---------------------------------------------------
+    def quarantine_slot(self, slot: int) -> None:
+        """Take a slot permanently out of rotation (a lost plane — see
+        serve/faults.py).  The engine has already recovered or failed the
+        resident; here the slot just stops being allocatable.  Fatal once
+        every slot is quarantined: the engine cannot serve."""
+        if slot in self.quarantined:
+            return
+        self.quarantined.add(slot)
+        if slot in self.free_slots:
+            self.free_slots.remove(slot)
+            heapq.heapify(self.free_slots)
+        if len(self.quarantined) >= self.n_slots:
+            raise RuntimeError(
+                f"all {self.n_slots} decode slots quarantined after plane "
+                "losses; the engine has no healthy rows left to serve on")
+
+    def timeout(self, req: Request, now: float = 0.0) -> None:
+        """Deadline exceeded (``Request.deadline_s``): terminal TIMEOUT
+        with the partial output kept, slot/queue entry released like a
+        cancel.  Idempotent on an already-terminal request."""
+        if req.done:
+            return
+        self._release(req)
+        req.state = RequestState.TIMEOUT
+        req.finish_time = now
+        self.policy.on_finish(req, now)
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: Request) -> None:

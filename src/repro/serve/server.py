@@ -52,6 +52,19 @@ from repro.serve.engine import ContinuousBatchingEngine, RequestFailedError
 from repro.serve.scheduler import Request
 
 _DONE = object()                      # stream sentinel: normal end
+_TIMED_OUT = object()                 # stream sentinel: deadline exceeded
+
+
+class RequestTimedOut(RuntimeError):
+    """Raised by a stream whose request blew its ``deadline_s`` budget
+    (terminal TIMEOUT — partial output was delivered, the tail never
+    comes)."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        super().__init__(
+            f"request {request.rid} timed out after its "
+            f"{request.deadline_s}s deadline")
 
 
 class _Failed:
@@ -92,6 +105,9 @@ class TokenStream:
         if item is _DONE:
             self._exhausted = True
             raise StopAsyncIteration
+        if item is _TIMED_OUT:
+            self._exhausted = True
+            raise RequestTimedOut(self.request)
         if isinstance(item, _Failed):
             self._exhausted = True
             raise RequestFailedError([self.request])
@@ -119,15 +135,24 @@ class TokenStream:
     def error(self) -> "str | None":
         return self.request.error
 
+    @property
+    def timed_out(self) -> bool:
+        return self.request.timed_out
+
     # -- producer side -----------------------------------------------------
-    def _force_end(self, error: "str | None" = None) -> None:
+    def _force_end(self, error: "str | None" = None, *,
+                   timeout: bool = False) -> None:
         """Terminal sentinel that cannot block: on an abnormal end
-        (cancel / server stop) a full queue drops its oldest entry to make
-        room — the stream is dead either way and the consumer must wake."""
+        (cancel / server stop / deadline) a full queue drops its oldest
+        entry to make room — the stream is dead either way and the
+        consumer must wake."""
         if self._ended:
             return
         self._ended = True
-        item = _Failed(error) if error is not None else _DONE
+        if timeout:
+            item = _TIMED_OUT
+        else:
+            item = _Failed(error) if error is not None else _DONE
         try:
             self._queue.put_nowait(item)
         except asyncio.QueueFull:
@@ -223,6 +248,14 @@ class AsyncServer:
         prompt, zero budget) raise the engine's ``ValueError`` here."""
         if self._task is None:
             raise RuntimeError("server not started")
+        if self._task.done():
+            # the serve loop died (e.g. step-retry exhaustion): a pending
+            # submission would never be admitted — fail it loudly now
+            exc = (self._task.exception()
+                   if not self._task.cancelled() else None)
+            raise RuntimeError(
+                "serve loop has terminated; the engine is no longer "
+                "admitting requests") from exc
         if self._stopping:
             raise RuntimeError("server is stopping")
         fut = asyncio.get_running_loop().create_future()
@@ -304,6 +337,8 @@ class AsyncServer:
                 await tick.wait()
             if req.error is not None:
                 stream._force_end(req.error)
+            elif req.timed_out:
+                stream._force_end(timeout=True)
             elif req.cancelled:
                 stream._force_end()
             else:

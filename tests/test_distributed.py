@@ -559,6 +559,49 @@ class TestShardedServe:
         """)
         assert out.count("PREFIX_PARITY_OK") == 1
 
+    def test_sharded_fault_recovery_token_identical(self):
+        """Step-level recovery on the 2x4 mesh must match the fault-free
+        single-device run.  A failed donated step consumes the sharded pool,
+        so ``_rebuild_pool`` re-allocates it with ``jax.device_put`` against
+        the recorded state sharding — if the rebuilt pool lands with the
+        wrong layout, the retried step either crashes or silently computes
+        on garbage rows and token parity breaks.  Slot loss additionally
+        exercises resident recovery (recompute-replay) over the mesh."""
+        out = _run_with_devices(8, """
+            import jax
+            from repro.configs.registry import ARCHS
+            from repro.models import model as M
+            from repro.models.transformer import Runtime
+            from repro.serve.engine import ContinuousBatchingEngine
+            from repro.serve.faults import FaultInjector
+            cfg = ARCHS["llama3-8b"].reduced()
+            params = M.init_params(jax.random.key(0), cfg)
+            prompts = [jax.random.randint(jax.random.key(10 + i), (6,), 0,
+                                          cfg.vocab_size).tolist()
+                       for i in range(4)]
+            ref = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=48,
+                chunk=4).generate_all(prompts, [8] * 4)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            rt = Runtime(mesh=mesh, data_axes=("data",),
+                         serve_resident_moe=True)
+            eng = ContinuousBatchingEngine(
+                cfg, params, n_slots=2, max_len=48, chunk=4, rt=rt,
+                faults=FaultInjector(seed=0, step_fail_at=(7, 19),
+                                     slot_loss_at=((13, 0),)),
+                retry_backoff_s=0.0)
+            got = eng.generate_all(prompts, [8] * 4)
+            assert got == ref, (got, ref)
+            s = eng.stats
+            assert s["step_failures"] == 2 and s["pool_rebuilds"] == 2, s
+            assert s["slot_losses"] == 1 and s["recovery_recomputes"] >= 1, s
+            assert eng.scheduler.quarantined == {0}
+            print("FAULT_PARITY_OK",
+                  "rebuilds=%d recomputes=%d" % (s["pool_rebuilds"],
+                                                 s["recovery_recomputes"]))
+        """)
+        assert out.count("FAULT_PARITY_OK") == 1
+
 
 class TestMeshRope:
     """The B=1 atomic prefill routes RoPE through ``apply_rope_spmd`` under

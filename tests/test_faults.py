@@ -1,0 +1,578 @@
+"""NAND-grounded fault model + serve-path fault tolerance (DESIGN §1j):
+ECC decode cost units, per-row checksum detection, injector determinism,
+and the engine-level recovery bar — recovered streams must be
+token-identical to a fault-free run for every recoverable fault class
+(correctable/uncorrectable cold-read bit-flips, transient step failures,
+plane/slot loss) across scheduling policies, with the slot ledger
+balanced and no carry leaks afterwards."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.pim import latency as L
+from repro.core.pim import params as P
+from repro.serve import faults as F
+from repro.serve.scheduler import RequestState, Scheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# ECC decode cost model (pure host code)
+# ---------------------------------------------------------------------------
+class TestEccCost:
+    def test_zero_bytes_is_free(self):
+        c = L.ecc_decode(0)
+        assert c.pages == 0 and c.t_decode == 0.0 and c.cycles == 0
+
+    def test_pages_round_up(self):
+        assert L.ecc_decode(1).pages == 1
+        assert L.ecc_decode(P.PAGE_BYTES).pages == 1
+        assert L.ecc_decode(P.PAGE_BYTES + 1).pages == 2
+
+    def test_syndrome_cycles_per_page(self):
+        c = L.ecc_decode(4 * P.PAGE_BYTES)
+        assert c.cycles == 4 * P.ECC_SYNDROME_CYCLES_PER_PAGE
+
+    def test_corrected_bits_pay_chien_search(self):
+        clean = L.ecc_decode(4 * P.PAGE_BYTES)
+        fixed = L.ecc_decode(4 * P.PAGE_BYTES, corrected_bits=5)
+        assert fixed.cycles == (clean.cycles
+                                + 5 * P.ECC_CYCLES_PER_CORRECTED_BIT)
+
+
+# ---------------------------------------------------------------------------
+# per-row checksums over cold blocks (pure host code)
+# ---------------------------------------------------------------------------
+def _blob(n=3, seed=0):
+    """A minimal cold-block payload: one attention seq block (rows on
+    axis 2, like kv_swap's truncated leaves) plus one fixed-state leaf."""
+    rng = np.random.default_rng(seed)
+    blk = {"k_q": rng.integers(-128, 127, (2, 4, n, 8)).astype(np.int8),
+           "k_s": rng.standard_normal((2, 4, n, 1)).astype(np.float32)}
+    fixed = rng.standard_normal(6).astype(np.float32)
+    return {"groups": ((blk,), (fixed,)), "pos": np.array([n], np.int32)}
+
+
+class TestRowChecksums:
+    def test_clean_roundtrip(self):
+        b = _blob()
+        assert F.verify_rows(b, F.row_checksums(b)) == []
+
+    def test_flip_pins_the_damaged_row(self):
+        b = _blob(n=4)
+        sums = F.row_checksums(b)
+        b["groups"][0][0]["k_q"][1, 2, 2, 3] ^= 1
+        assert F.verify_rows(b, sums) == [2]
+
+    def test_fixed_state_entry_is_last(self):
+        b = _blob(n=3)
+        sums = F.row_checksums(b)
+        b["groups"][1][0][0] += 1.0
+        assert F.verify_rows(b, sums) == [3]
+
+    def test_shape_mismatch_flags_everything(self):
+        a, b = _blob(n=3), _blob(n=5)
+        assert len(F.verify_rows(b, F.row_checksums(a))) == 6
+
+    def test_pos_not_covered(self):
+        b = _blob()
+        sums = F.row_checksums(b)
+        b["pos"] = np.array([b["pos"][0]], np.int32)  # fresh host metadata
+        assert F.verify_rows(b, sums) == []
+
+
+# ---------------------------------------------------------------------------
+# fault injector (pure host code)
+# ---------------------------------------------------------------------------
+class TestFaultInjector:
+    def test_mode_validated(self):
+        with pytest.raises(ValueError):
+            F.FaultInjector(mode="cosmic_rays")
+
+    def test_default_ber_follows_mode(self):
+        assert (F.FaultInjector(mode="retention").bit_error_rate
+                == P.RBER_SLC_RETENTION)
+        assert (F.FaultInjector(mode="read_disturb").bit_error_rate
+                == P.RBER_SLC_READ_DISTURB)
+
+    def test_corruption_deterministic_across_instances(self):
+        a = F.FaultInjector(seed=3, ber=1e-3)
+        b = F.FaultInjector(seed=3, ber=1e-3)
+        blob = _blob(n=4)
+        ca, fa = a.corrupt_block(("req", 0), blob)
+        cb, fb = b.corrupt_block(("req", 0), blob)
+        np.testing.assert_array_equal(fa, fb)
+        for la, lb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+            np.testing.assert_array_equal(la, lb)
+
+    def test_corruption_copies_never_mutates(self):
+        inj = F.FaultInjector(seed=1, ber=0.05)
+        blob = _blob(n=4)
+        before = F.row_checksums(blob)
+        new, flips = inj.corrupt_block(("req", 1), blob)
+        assert flips.sum() > 0
+        assert F.verify_rows(blob, before) == []          # input untouched
+        assert F.verify_rows(new, before) != []
+
+    def test_successive_reads_draw_fresh_errors(self):
+        inj = F.FaultInjector(seed=1, ber=0.01)
+        blob = _blob(n=4)
+        a, _ = inj.corrupt_block(("req", 0), blob)
+        b, _ = inj.corrupt_block(("req", 0), blob)
+        same = all(np.array_equal(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        assert not same
+
+    def test_zero_ber_returns_input(self):
+        inj = F.FaultInjector(ber=0.0)
+        blob = _blob()
+        new, flips = inj.corrupt_block(("req", 0), blob)
+        assert new is blob and flips.size == 0
+
+    def test_step_events_fire_once(self):
+        inj = F.FaultInjector(step_fail_at=(5,))
+        assert [s for s in range(10) if inj.fail_step(s)] == [5]
+        assert not inj.fail_step(5)                       # retry re-entry
+        inj2 = F.FaultInjector(step_fail_every=4)
+        fired = [s for s in range(1, 13) if inj2.fail_step(s)]
+        assert fired == [4, 8, 12]
+        assert inj2.injected["step_failures"] == 3
+
+    def test_slot_loss_fires_once_late(self):
+        inj = F.FaultInjector(slot_loss_at=((5, 1), (7, 0)))
+        assert inj.lost_slots(3) == []
+        assert inj.lost_slots(6) == [1]                   # late is fine
+        assert inj.lost_slots(9) == [0]
+        assert inj.lost_slots(20) == []
+        assert inj.injected["slot_losses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# detection pipeline (FaultTolerance, no engine)
+# ---------------------------------------------------------------------------
+def _ft_stats():
+    return {"ecc_checks": 0, "ecc_pages": 0, "ecc_cycles": 0,
+            "ecc_corrected_bits": 0, "bitflips_injected": 0,
+            "uncorrectable_blocks": 0}
+
+
+class TestFaultTolerance:
+    def test_clean_read_meters_syndrome_only(self):
+        stats = _ft_stats()
+        ft = F.FaultTolerance(stats)
+        blob = _blob()
+        ft.note_write("k", blob)
+        out = ft.read_block("k", blob)
+        assert out is blob
+        assert stats["ecc_checks"] == 1 and stats["ecc_pages"] > 0
+        assert stats["ecc_cycles"] > 0
+        assert stats["ecc_corrected_bits"] == 0
+        assert stats["uncorrectable_blocks"] == 0
+
+    def test_correctable_flips_return_clean_data(self):
+        stats = _ft_stats()
+        # huge t: whatever the injector flips stays in ECC range
+        ft = F.FaultTolerance(stats, F.FaultInjector(seed=2, ber=1e-3),
+                              ecc_t=10**6)
+        blob = _blob(n=4)
+        ft.note_write("k", blob)
+        out = ft.read_block("k", blob)
+        assert F.verify_rows(out, F.row_checksums(blob)) == []
+        assert stats["ecc_corrected_bits"] > 0
+        assert stats["bitflips_injected"] == stats["ecc_corrected_bits"]
+
+    def test_uncorrectable_raises_and_quarantines(self):
+        stats = _ft_stats()
+        ft = F.FaultTolerance(stats, F.FaultInjector(seed=2, ber=0.05),
+                              ecc_t=0)
+        blob = _blob(n=4)
+        ft.note_write("k", blob)
+        with pytest.raises(F.ColdBlockCorrupt) as ei:
+            ft.read_block("k", blob)
+        assert ei.value.key == "k" and ei.value.bad_rows
+        assert stats["uncorrectable_blocks"] == 1
+        assert "k" not in ft._sums                        # sums dropped
+
+    def test_unchecksummed_block_judged_by_ecc_alone(self):
+        stats = _ft_stats()
+        ft = F.FaultTolerance(stats, F.FaultInjector(seed=2, ber=0.05),
+                              ecc_t=0)
+        with pytest.raises(F.ColdBlockCorrupt):
+            ft.read_block("ghost", _blob())
+        assert stats["uncorrectable_blocks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: quarantine + deadline plumbing (no engine)
+# ---------------------------------------------------------------------------
+def _req(rid, **kw):
+    from repro.serve.scheduler import Request
+    kw.setdefault("prompt", [1, 2, 3])
+    kw.setdefault("max_new_tokens", 4)
+    return Request(rid=rid, **kw)
+
+
+class TestSchedulerQuarantine:
+    def test_quarantined_slot_never_reissued(self):
+        s = Scheduler(n_slots=2, max_len=32)
+        s.quarantine_slot(0)
+        assert s.free_slots == [1]
+        s.submit(_req(0))
+        (r,) = s.admit()
+        assert r.slot == 1
+        s.retire(r)
+        assert s.free_slots == [1]                        # 0 stays out
+
+    def test_quarantine_idempotent(self):
+        s = Scheduler(n_slots=2, max_len=32)
+        s.quarantine_slot(1)
+        s.quarantine_slot(1)
+        assert s.quarantined == {1} and s.free_slots == [0]
+
+    def test_all_slots_quarantined_fatal(self):
+        s = Scheduler(n_slots=2, max_len=32)
+        s.quarantine_slot(0)
+        with pytest.raises(RuntimeError, match="quarantined"):
+            s.quarantine_slot(1)
+
+    def test_timeout_is_terminal_and_releases_slot(self):
+        s = Scheduler(n_slots=1, max_len=32)
+        r = _req(0, deadline_s=0.5)
+        s.submit(r)
+        s.admit()
+        s.timeout(r, now=1.0)
+        assert r.state is RequestState.TIMEOUT and r.done and r.timed_out
+        assert r.finish_time == 1.0
+        assert s.free_slots == [0] and not s.has_work()
+
+    def test_timeout_after_done_is_noop(self):
+        s = Scheduler(n_slots=1, max_len=32)
+        r = _req(0)
+        s.submit(r)
+        s.admit()
+        s.retire(r)
+        s.timeout(r, now=9.0)
+        assert r.state is RequestState.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# engine-level recovery: token parity across fault classes and policies
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def llama():
+    from repro.models import model as M
+    cfg = ARCHS["llama3-8b"].reduced()
+    return cfg, M.init_params(jax.random.key(0), cfg)
+
+
+def _engine(cfg, params, **kw):
+    from repro.serve.engine import ContinuousBatchingEngine
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _trace(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(6, 17))).tolist()
+               for _ in range(n)]
+    budgets = [int(rng.integers(4, 9)) for _ in range(n)]
+    return prompts, budgets
+
+
+def _drain_all(eng, prompts, budgets, **submit_kw):
+    reqs = [eng.submit(p, b, **submit_kw)
+            for p, b in zip(prompts, budgets)]
+    eng.drain()
+    return reqs
+
+
+def _ledger_ok(eng):
+    sched = eng.scheduler
+    return (len(sched.free_slots) + len(sched.quarantined) == eng.n_slots
+            and not eng._carries and not sched.has_work())
+
+
+class TestEngineRecovery:
+    def test_correctable_ecc_is_transparent(self, llama):
+        """Low-BER cold reads decode back to the written bytes: the swap
+        engine under injected retention errors must match the fault-free
+        swap engine token-for-token, with the ECC pipeline metered."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        kw = dict(chunk=4, policy="fair:3", kv_swap=True)
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, ber=2e-4))
+        got = _drain_all(eng, prompts, budgets)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        assert eng.stats["ecc_checks"] > 0
+        assert eng.stats["ecc_corrected_bits"] > 0
+        assert eng.stats["uncorrectable_blocks"] == 0
+        assert eng.stats["ecc_cycles"] > 0
+        assert _ledger_ok(eng)
+
+    @pytest.mark.parametrize("policy", ["fair:3", "priority:preempt"])
+    def test_uncorrectable_block_recompute_parity(self, llama, policy):
+        """A BER far past the BCH budget corrupts every cold read: each
+        restore falls back to deterministic recompute-replay and the
+        streams still match the fault-free run."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        kw = dict(chunk=4, policy=policy, kv_swap=True)
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, ber=0.05))
+        got = _drain_all(eng, prompts, budgets)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        if eng.stats["swap_outs"] > 0:
+            assert eng.stats["uncorrectable_blocks"] > 0
+            assert eng.stats["recovery_recomputes"] > 0
+        assert _ledger_ok(eng)
+
+    @pytest.mark.parametrize("policy", ["fifo", "sjf", "priority:preempt",
+                                        "fair:3"])
+    def test_step_failure_recovery_parity(self, llama, policy):
+        """A transient device error consumes the donated pool mid-run; the
+        bounded retry rebuilds it from committed host state and every
+        stream finishes token-identical, for every scheduling policy."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        kw = dict(chunk=4, policy=policy, kv_swap=True)
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, step_fail_at=(9, 23)))
+        got = _drain_all(eng, prompts, budgets)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        assert eng.stats["pool_rebuilds"] > 0
+        assert eng.stats["step_retries"] == eng.stats["pool_rebuilds"]
+        assert _ledger_ok(eng)
+
+    def test_sampled_step_failure_recovery_parity(self, llama):
+        """Sampled replay re-consumes the per-request RNG stream from the
+        top, so recompute-recovery reproduces sampled tokens exactly."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg, n=4)
+        kw = dict(chunk=4, policy="fifo")
+        sub = dict(temperature=1.0, top_k=8, seed=11)
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets, **sub)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, step_fail_at=(8,)))
+        got = _drain_all(eng, prompts, budgets, **sub)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert eng.stats["pool_rebuilds"] > 0
+        assert _ledger_ok(eng)
+
+    def test_pool_rebuild_after_real_device_failure(self, llama):
+        """Satellite: a *real* (non-injected) failed donated call — the
+        jitted decode raises after consuming the pool — is survived: the
+        engine rebuilds, drains every stream token-identically, the slot
+        ledger balances and no prefill carry leaks."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        kw = dict(chunk=4, policy="fifo")
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        eng = _engine(cfg, params, **kw)
+        orig, box = eng._decode, {"calls": 0, "fired": False}
+
+        def flaky(qp, state, tok):
+            box["calls"] += 1
+            if box["calls"] == 3 and not box["fired"]:
+                box["fired"] = True
+                for leaf in jax.tree.leaves(eng.state):
+                    leaf.delete()                 # donated args are gone
+                raise RuntimeError("emulated device error")
+            return orig(qp, state, tok)
+
+        eng._decode = flaky
+        got = _drain_all(eng, prompts, budgets)
+        assert box["fired"]
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        assert eng.stats["step_failures"] == 1
+        assert eng.stats["pool_rebuilds"] == 1
+        assert not jax.tree.leaves(eng.state)[0].is_deleted()
+        assert _ledger_ok(eng)
+        # the rebuilt engine keeps serving: a fresh request completes
+        extra = eng.submit([1, 2, 3, 4], 3)
+        eng.drain()
+        assert len(extra.output) == 3 and extra.error is None
+
+    def test_retry_budget_exhaustion_raises(self, llama):
+        """A *persistently* failing device must surface as an error, not
+        loop: every attempt inside one step() call dies, so the bounded
+        retry budget exhausts.  (A scheduled transient injector cannot
+        reach this by construction — its failures are decode-gated, the
+        retry's rebuild preempts residents back to prefill so the
+        retried step succeeds on prefill work, and the attempt counter
+        resets on the next step() call: the worst a too-aggressive
+        schedule produces is the recompute-replay livelock DESIGN §1j
+        documents, never a silent budget overrun.)"""
+        cfg, params = llama
+        eng = _engine(cfg, params, chunk=4, max_step_retries=1,
+                      retry_backoff_s=0.0)
+        eng.submit([1, 2, 3, 4], 3)
+
+        def dying_step():
+            raise F.InjectedStepFailure("persistently failing device")
+
+        eng._step = dying_step
+        with pytest.raises(RuntimeError, match="retry budget exhausted"):
+            eng.step()
+        assert eng.stats["step_failures"] == 2
+        assert eng.stats["step_retries"] == 1
+        assert eng.stats["pool_rebuilds"] == 1
+        assert not jax.tree.leaves(eng.state)[0].is_deleted()
+
+    def test_slot_loss_quarantine_and_parity(self, llama):
+        """Plane loss mid-decode: the resident recovers onto a healthy
+        slot (token-identical), the dead slot is quarantined for good,
+        and the remaining capacity drains the trace."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        kw = dict(chunk=4, policy="fifo")
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, slot_loss_at=((6, 0),)))
+        got = _drain_all(eng, prompts, budgets)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        assert eng.scheduler.quarantined == {0}
+        assert eng.stats["slot_losses"] == 1
+        assert eng.stats["quarantined_slots"] == 1
+        assert _ledger_ok(eng)
+
+    def test_slot_loss_cold_reread_from_recovery_copy(self, llama):
+        """A greedy resident restored from the cold tier keeps its block
+        as a recovery copy; when its plane later dies, recovery re-reads
+        the (possibly stale) copy and tail-replays instead of recomputing
+        the whole prefix — still token-identical."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg, n=6, seed=3)
+        kw = dict(chunk=4, policy="fair:3", kv_swap=True)
+        ref = _drain_all(_engine(cfg, params, **kw), prompts, budgets)
+        # step 20: past the trace's first swap-restore (so slot 0's
+        # resident holds a retained recovery copy) but well before the
+        # 24-step fault-free drain, so the loss actually fires
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0,
+                                             slot_loss_at=((20, 0),)))
+        got = _drain_all(eng, prompts, budgets)
+        assert [r.output for r in got] == [r.output for r in ref]
+        assert all(r.error is None for r in got)
+        assert eng.stats["slot_losses"] == 1
+        assert eng.stats["cold_rereads"] >= 1
+        assert _ledger_ok(eng)
+
+    def test_all_slots_lost_is_fatal(self, llama):
+        cfg, params = llama
+        prompts, budgets = _trace(cfg, n=2)
+        eng = _engine(cfg, params, chunk=4,
+                      faults=F.FaultInjector(
+                          seed=0, slot_loss_at=((4, 0), (4, 1))))
+        with pytest.raises(RuntimeError, match="quarantined"):
+            _drain_all(eng, prompts, budgets)
+
+    def test_deadline_times_out_straggler(self, llama):
+        cfg, params = llama
+        prompts, budgets = _trace(cfg, n=3)
+        eng = _engine(cfg, params, chunk=4)
+        reqs = _drain_all(eng, prompts, budgets, deadline_s=1e-6)
+        assert all(r.state is RequestState.TIMEOUT and r.timed_out
+                   for r in reqs)
+        assert eng.stats["timeouts"] == len(reqs)
+        assert _ledger_ok(eng)
+
+    def test_deadline_roomy_enough_never_fires(self, llama):
+        cfg, params = llama
+        prompts, budgets = _trace(cfg, n=3)
+        eng = _engine(cfg, params, chunk=4)
+        reqs = _drain_all(eng, prompts, budgets, deadline_s=3600.0)
+        assert all(r.state is RequestState.FINISHED for r in reqs)
+        assert eng.stats["timeouts"] == 0
+
+    def test_deadline_validated(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params)
+        with pytest.raises(ValueError):
+            eng.submit([1, 2, 3], 2, deadline_s=0.0)
+
+    def test_drain_stall_names_stuck_requests(self, llama):
+        """Satellite: the drain() stall error names every stuck request
+        id and scheduler state instead of an anonymous count."""
+        cfg, params = llama
+        eng = _engine(cfg, params, drain_stall_limit=2)
+        eng.submit([1, 2, 3, 4], 2)
+        eng.step = lambda: False                  # engine wedged
+        with pytest.raises(RuntimeError) as ei:
+            eng.drain()
+        msg = str(ei.value)
+        assert "drain() stalled" in msg
+        assert "rid=0:queued" in msg
+
+    def test_corrupt_promote_falls_back_to_cold_prefill(self, llama):
+        """A demoted prefix leaf whose cold block fails its tier-crossing
+        check must not poison warm admissions: the promote is abandoned
+        (block quarantined) and the request cold-prefills to the same
+        tokens."""
+        cfg, params = llama
+        rng = np.random.default_rng(9)
+        shared = rng.integers(0, cfg.vocab_size, 10).tolist()
+        prompts = [shared + rng.integers(0, cfg.vocab_size, 4).tolist()
+                   for _ in range(4)]
+        budgets = [4] * 4
+        kw = dict(chunk=4, prefix_cache=True, prefix_cache_rows=16,
+                  kv_swap=True, cold_rows=96)
+        ref = _engine(cfg, params, chunk=4).generate_all(prompts, budgets)
+        eng = _engine(cfg, params, **kw,
+                      faults=F.FaultInjector(seed=0, ber=0.05))
+        got = []
+        for p, b in zip(prompts, budgets):       # serial: force demote/remote
+            got.extend(eng.generate_all([p], [b]))
+        assert got == ref
+        assert _ledger_ok(eng)
+
+
+# ---------------------------------------------------------------------------
+# stats schema: always-on recovery keys vs FT-gated keys
+# ---------------------------------------------------------------------------
+class TestFaultStatsSchema:
+    def test_recovery_keys_always_on(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params)
+        for k in ("timeouts", "slow_steps", "step_failures",
+                  "step_retries", "pool_rebuilds"):
+            assert eng.stats[k] == 0
+
+    def test_ft_keys_absent_when_off(self, llama):
+        cfg, params = llama
+        eng = _engine(cfg, params)
+        assert eng._ft is None and eng._injector is None
+        assert "ecc_checks" not in eng.stats
+        assert "quarantined_slots" not in eng.stats
+
+    def test_ft_layer_without_injector(self, llama):
+        """faults=True arms checksums + ECC metering with no chaos source:
+        real reads still flow the pipeline."""
+        cfg, params = llama
+        prompts, budgets = _trace(cfg)
+        eng = _engine(cfg, params, chunk=4, policy="fair:3", kv_swap=True,
+                      faults=True)
+        assert eng._ft is not None and eng._injector is None
+        got = _drain_all(eng, prompts, budgets)
+        assert all(r.error is None for r in got)
+        if eng.stats["swap_ins"]:
+            assert eng.stats["ecc_checks"] >= eng.stats["swap_ins"]
+        assert eng.stats["bitflips_injected"] == 0
+        assert eng.stats["uncorrectable_blocks"] == 0
+
+    def test_max_step_retries_validated(self, llama):
+        cfg, params = llama
+        with pytest.raises(ValueError):
+            _engine(cfg, params, max_step_retries=-1)

@@ -310,3 +310,76 @@ class TestMonotonicClock:
         assert eng.now() > 0.0
         eng.reset_clock()
         assert eng.now() < 0.01 + 1.0
+
+
+class TestServeLoopFault:
+    """An exception escaping ``engine.step()`` on the worker thread must
+    not strand consumers: every live TokenStream gets a terminal failure,
+    later submissions are rejected loudly, and ``stop()`` re-raises the
+    loop's exception (DESIGN §1j)."""
+
+    def test_step_exception_fails_all_live_streams(self, setup):
+        from repro.serve.engine import RequestFailedError
+        from repro.serve.server import AsyncServer
+
+        cfg, params = setup
+        # long budgets: every stream must still be live when the loop dies
+        prompts, budgets = [[1, 2, 3]] * 3, [20] * 3
+        eng = _engine(cfg, params)
+        orig = eng.step
+
+        def flaky():
+            # deterministic trigger: die on the first step that sees the
+            # whole trace admitted (no race with the submit handoff)
+            if len(eng.scheduler.queue) + len(eng.scheduler.active) >= 3:
+                raise RuntimeError("device on fire")
+            return orig()
+
+        eng.step = flaky
+
+        async def run():
+            srv = AsyncServer(eng, stream_buffer=4)
+            await srv.start()
+            streams = [await srv.submit(p, b)
+                       for p, b in zip(prompts, budgets)]
+            failed = 0
+            for s in streams:
+                with pytest.raises(RequestFailedError):
+                    async for _ in s:
+                        pass
+                failed += 1
+            with pytest.raises(RuntimeError,
+                               match="serve loop has terminated"):
+                await srv.submit(prompts[0], 2)
+            with pytest.raises(RuntimeError, match="device on fire"):
+                await srv.stop()
+            return failed, streams
+
+        failed, streams = asyncio.run(run())
+        assert failed == len(streams) == 3
+
+    def test_deadline_stream_raises_request_timed_out(self, setup):
+        from repro.serve.server import AsyncServer, RequestTimedOut
+
+        cfg, params = setup
+        prompts, budgets = _trace(cfg, n=2)
+        eng = _engine(cfg, params)
+
+        async def run():
+            async with AsyncServer(eng, stream_buffer=4) as srv:
+                fast = await srv.submit(prompts[0], budgets[0])
+                late = await srv.submit(prompts[1], budgets[1],
+                                        deadline_s=1e-6)
+                toks = []
+                async for t in fast:
+                    toks.append(t)
+                with pytest.raises(RequestTimedOut):
+                    async for _ in late:
+                        pass
+                assert late.timed_out and not late.cancelled
+                assert late.request.state is RequestState.TIMEOUT
+                assert len(toks) == budgets[0]    # healthy stream unharmed
+
+        asyncio.run(run())
+        assert eng.stats["timeouts"] == 1
+        assert not eng.scheduler.has_work()
